@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: timing, chain builders, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call of a jitted fn (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def build_chain(length: int, *, scalable: bool, n_pages: int = 2048,
+                page_size: int = 64, fill: float = 0.9, seed: int = 0):
+    """A chain of ``length`` files with valid pages uniformly distributed
+    over the layers (the paper's §6.1 methodology)."""
+    ch = store.create(
+        n_pages=n_pages, page_size=page_size, max_chain=length + 1,
+        scalable=scalable, pool_capacity=int(n_pages * (1 + fill * 2)),
+        l2_per_table=64, slice_len=16,
+    )
+    key = jax.random.PRNGKey(seed)
+    n_filled = int(n_pages * fill)
+    pages = jax.random.permutation(key, n_pages)[:n_filled]
+    per_layer = max(1, n_filled // max(length, 1))
+    for i in range(length):
+        ids = pages[i * per_layer:(i + 1) * per_layer].astype(jnp.int32)
+        if ids.shape[0] == 0:
+            break
+        data = jnp.full((ids.shape[0], page_size), float(i + 1))
+        ch = store.write(ch, ids, data)
+        if i < length - 1:
+            ch = store.snapshot(ch)
+    return ch
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: lower+compile named variants of the three chosen
+cells and record their roofline terms (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant base
+    PYTHONPATH=src python -m benchmarks.hillclimb --list
+"""
+
+import argparse
+import json
+
+CELLS = {
+    # most collective-bound cell (largest absolute collective term)
+    "A": ("qwen2-72b", "train_4k"),
+    # worst substantive roofline fraction (SSM recurrence traffic)
+    "B": ("rwkv6-3b", "train_4k"),
+    # most representative of the paper's technique (KV-cache state mgmt)
+    "C": ("qwen2-72b", "decode_32k"),
+    # bonus: MoE dispatch efficiency (lowest useful-flops ratio in the table)
+    "D": ("qwen2-moe-a2.7b", "train_4k"),
+    # bonus: biggest prefill cell
+    "E": ("qwen2-72b", "prefill_32k"),
+}
+
+VARIANTS = {
+    "base": {},
+    "bf16cast": dict(cast_bf16=True),
+    "gradpin": dict(),  # grad_shardings now default; "base_nopin" disables
+    "base_nopin": dict(no_grad_pin=True),
+    "sp": dict(seq_shard=True),
+    "bf16_sp": dict(cast_bf16=True, seq_shard=True),
+    "bf16_sp_accum4": dict(cast_bf16=True, seq_shard=True, accum=4),
+    "bf16_sp_accum2": dict(cast_bf16=True, seq_shard=True, accum=2),
+    "bf16_accum4": dict(cast_bf16=True, accum=4),
+    "sp_accum4": dict(seq_shard=True, accum=4),
+    "sp_accum1": dict(seq_shard=True, accum=1),
+    "accum4": dict(accum=4),
+    "accum8": dict(accum=8),
+    "sp_accum8": dict(seq_shard=True, accum=8),
+    "rwkv_chunked": dict(extra=dict(rwkv_chunked=True)),
+    "rwkv_chunked_sp": dict(seq_shard=True, extra=dict(rwkv_chunked=True)),
+    "rwkv_chunked32": dict(extra=dict(rwkv_chunked=True, scan_chunk=32)),
+    "rwkv_chunked128": dict(extra=dict(rwkv_chunked=True, scan_chunk=128)),
+    "rwkv_chunked256": dict(extra=dict(rwkv_chunked=True, scan_chunk=256)),
+    "chunk128": dict(extra=dict(scan_chunk=128)),
+    "chunk256": dict(extra=dict(scan_chunk=256)),
+    "chunk512": dict(extra=dict(scan_chunk=512)),
+    "noremat": dict(extra=dict(remat=False)),
+    "f32cache": dict(extra=dict(cache_f32=True)),
+    "cf10": dict(extra=dict(capacity_factor=1.0)),
+    "cf20": dict(extra=dict(capacity_factor=2.0)),
+    "cf10_sp_accum8": dict(seq_shard=True, accum=8, extra=dict(capacity_factor=1.0)),
+    "cf10_sp_accum4": dict(seq_shard=True, accum=4, extra=dict(capacity_factor=1.0)),
+    "pbf16": dict(params_bf16=True),
+    "pbf16_f32cache": dict(params_bf16=True, extra=dict(cache_f32=True)),
+    "sp_noremat": dict(seq_shard=True, extra=dict(remat=False)),
+}
+
+
+def run(cell: str, variant: str, out_dir: str = "results/perf"):
+    from repro.launch.dryrun import lower_cell
+
+    arch, shape = CELLS[cell]
+    v = dict(VARIANTS[variant])
+    extra = v.pop("extra", None)
+    rec = lower_cell(arch, shape, multi_pod=False, variant=v, extra=extra)
+    rec["variant"] = variant
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{cell}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    t = rec["roofline_terms_s"]
+    print(
+        f"{cell}/{variant}: compute={t['compute_s']:.2f}s "
+        f"memory={t['memory_s']:.2f}s collective={t['collective_s']:.2f}s "
+        f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+        f"bottleneck={rec['bottleneck']}",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=False)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for c, (a, s) in CELLS.items():
+            print(c, a, s)
+        return
+    run(args.cell, args.variant)
+
+
+if __name__ == "__main__":
+    main()

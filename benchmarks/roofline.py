@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run manifests (deliverable g).
+
+Reads ``results/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+prints, per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction. MODEL_FLOPS
+is recomputed from the configs (6·N_active·D train / 2·N_active·D
+inference) so config fixes don't require recompiling.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HW
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    mult = 6.0 if spec.kind == "train" else 2.0
+    return mult * cfg.active_param_count() * tokens
+
+
+def load_records(out_dir: str = "results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        mf = model_flops(r["arch"], r["shape"]) / r["n_devices"]
+        t = r["roofline_terms_s"]
+        dom = max(t.values())
+        r["model_flops_per_device"] = mf
+        r["useful_flops_ratio"] = mf / max(r["flops_per_device"], 1.0)
+        r["roofline_frac"] = (mf / HW["peak_flops_bf16"]) / dom if dom else 0.0
+        recs.append(r)
+    return recs
+
+
+def main(out_dir: str = "results/dryrun"):
+    recs = load_records(out_dir)
+    if not recs:
+        print("roofline,0,no dry-run manifests found (run repro.launch.dryrun)")
+        return
+    for r in recs:
+        t = r["roofline_terms_s"]
+        print(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0.00,"
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};bottleneck={r['bottleneck']};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_frac']:.4f};"
+            f"peak_GiB={r['memory']['peak_bytes_per_device']/2**30:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark harness: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Figures map per DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_figs, roofline, serving
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in paper_figs.ALL + serving.ALL:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    roofline.main()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: SnapStore — snapshot-chain state management for JAX at scale."""

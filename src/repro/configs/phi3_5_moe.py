@@ -1,0 +1,11 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 16 experts top-2, per-expert d_ff=6400.
+[hf:microsoft/Phi-3.5-MoE-instruct]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab_size=32064,
+    activation="silu", rope_theta=1e4,
+    n_experts=16, n_shared_experts=0, top_k=2, moe_d_ff=6400,
+)

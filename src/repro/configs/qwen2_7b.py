@@ -1,0 +1,9 @@
+"""qwen2-7b [dense]: GQA kv=4, QKV bias. [arXiv:2407.10671]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064,
+    qkv_bias=True, activation="silu", rope_theta=1e6,
+)

@@ -1,0 +1,16 @@
+"""SnapStore core: JAX-native COW snapshot-chain state management.
+
+The paper's contribution (sQEMU: direct access + unified indexing cache +
+snapshot copy-forward) as a composable JAX module. See DESIGN.md.
+"""
+
+from repro.core import format  # noqa: F401
+from repro.core.chain import Chain, ChainSpec, create, snapshot, stream, write  # noqa: F401
+from repro.core.resolve import (  # noqa: F401
+    ResolveResult,
+    get_resolver,
+    resolve_auto,
+    resolve_direct,
+    resolve_vanilla,
+)
+from repro.core import cache, metrics, store  # noqa: F401

@@ -1,0 +1,203 @@
+"""L2 indexing-cache model: per-file caches (vQemu) vs unified (sQEMU).
+
+The *production* read path of SnapStore resolves pages with pure gathers
+(``resolve.py``/``kernels/``) — HBM is the only "disk" on a TPU. This module
+exists to reproduce the paper's **low-level metrics** (Fig 13: cache misses,
+cache hits unallocated, per-file lookup distribution; Fig 14: lookup
+latency; Fig 16: cache-size sensitivity): it simulates the Qcow2 slice
+cache exactly as §2 of the paper describes it — slice-granular, fully
+associative, LRU — sequentially over a request stream, in jitted
+``lax.scan`` form.
+
+Event accounting follows the paper's definitions:
+
+* **cache miss** — the slice holding the request's L2 entry is not in the
+  (relevant) cache and must be fetched from the file (one T_D + T_L cost);
+* **cache hit** — the cached entry describes an allocated page;
+* **cache hit unallocated** — the cached entry is unallocated, so vQemu
+  moves on to the next backing file's cache (one T_F cost per event).
+
+Under vQemu a single request generates up to ``chain_length`` misses and
+hit-unallocated events (the chain walk); under sQEMU each request touches
+exactly one cache, and the entry's ``backing_file_index`` makes it directly
+usable even when the data lives in a backing file (``backing_reads``
+counts those). Memory: vQemu allocates one cache per file at boot;
+sQEMU's unified cache is O(1) in the chain length (Fig 12).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.core import format as fmt
+from repro.core.chain import Chain, ChainSpec
+
+
+class SimTrace(NamedTuple):
+    """Per-request event counts from a cache simulation (shape (R,))."""
+
+    probes: jax.Array           # cache lookups performed
+    misses: jax.Array           # slice fetches from "disk"
+    hits: jax.Array             # allocated-entry hits
+    hit_unallocated: jax.Array  # unallocated-entry events
+    backing_reads: jax.Array    # data reads served by a backing file
+    hist: jax.Array             # (max_chain,) lookups by owning file
+
+
+def cache_memory_bytes(
+    spec: ChainSpec,
+    n_slots: int,
+    chain_length: int,
+    *,
+    unified: bool,
+    per_snapshot_overhead: int = 256,
+) -> int:
+    """Index-cache RAM model (Fig 12).
+
+    vQemu allocates one slice cache per file in the chain at boot; sQEMU
+    keeps a single one. ``per_snapshot_overhead`` models the residual
+    per-snapshot driver structures the paper observes even under sQEMU
+    (§6.2: "other per-snapshot data structures").
+    """
+    slice_bytes = spec.slice_len * fmt.ENTRY_WORDS * 4
+    slot_bytes = slice_bytes + 16  # tag + ref + dirty + lru bookkeeping
+    one_cache = n_slots * slot_bytes
+    caches = 1 if unified else chain_length
+    return caches * one_cache + chain_length * per_snapshot_overhead
+
+
+def cache_correction(sv_entries: jax.Array, sb_entries: jax.Array) -> jax.Array:
+    """Paper §5.3 "cache correction": merge backing slice ``sb`` into the
+    cached slice ``sv``.
+
+    An entry of ``sv`` is replaced by the corresponding ``sb`` entry iff
+    ``sb`` is allocated and its ``backing_file_index`` is >= that of the
+    ``sv`` entry (or ``sv`` is unallocated). Monotone in bfi and
+    idempotent — properties checked by the test suite.
+    """
+    sb_alloc = fmt.entry_allocated(sb_entries)
+    sv_alloc = fmt.entry_allocated(sv_entries)
+    newer = fmt.entry_bfi(sb_entries) >= fmt.entry_bfi(sv_entries)
+    replace = sb_alloc & (~sv_alloc | newer)
+    return jnp.where(replace[..., None], sb_entries, sv_entries)
+
+
+@partial(jax.jit, static_argnames=("n_slots",))
+def simulate_vanilla(chain: Chain, page_ids: jax.Array, n_slots: int) -> SimTrace:
+    """Sequentially simulate the vQemu per-file caches over a request stream.
+
+    Each request walks the chain from the active volume down to the owning
+    file, probing (and on miss, filling) one cache per file visited.
+    """
+    spec = chain.spec
+    C = spec.max_chain
+    page_ids = page_ids.astype(jnp.int32)
+    chain_idx = jnp.arange(C, dtype=jnp.int32)
+    active = chain.length - 1
+
+    def step(carry, p):
+        tags, age, t = carry
+        slice_id = p // spec.slice_len
+        table_id = p // spec.l2_per_table
+
+        entries = chain.l2[:, p]                              # (C, 2)
+        alloc = fmt.entry_allocated(entries) & (chain_idx < chain.length)
+        owner = jnp.max(jnp.where(alloc, chain_idx, -1))
+        found = owner >= 0
+        low = jnp.where(found, owner, 0)
+        probed = (chain_idx >= low) & (chain_idx <= active)    # files visited
+        on_disk = chain.l1[:, table_id] > 0                    # slice exists
+
+        match = tags == slice_id                               # (C, S)
+        in_cache = jnp.any(match, axis=1)                      # (C,)
+        fetch = probed & ~in_cache & on_disk
+        n_probes = jnp.sum(probed.astype(jnp.int32))
+        n_miss = jnp.sum(fetch.astype(jnp.int32))
+        n_unal = jnp.sum((probed & on_disk).astype(jnp.int32)) - jnp.where(
+            found & on_disk[jnp.maximum(owner, 0)], 1, 0
+        )
+        n_hit = found.astype(jnp.int32)
+
+        # LRU touch for probe hits; insert (evicting LRU) for fetches.
+        t = t + 1
+        touch = match & (probed & in_cache)[:, None]
+        age = jnp.where(touch, t, age)
+        slot = jnp.argmin(age, axis=1)                         # (C,)
+        onehot = jax.nn.one_hot(slot, n_slots, dtype=bool)
+        upd = fetch[:, None] & onehot
+        tags = jnp.where(upd, slice_id, tags)
+        age = jnp.where(upd, t, age)
+
+        hist_r = probed.astype(jnp.int32)
+        out = (n_probes, n_miss, n_hit, n_unal, jnp.int32(0), hist_r)
+        return (tags, age, t), out
+
+    tags0 = jnp.full((C, n_slots), -1, jnp.int32)
+    age0 = jnp.full((C, n_slots), -1, jnp.int32)
+    (_, _, _), (probes, misses, hits, unal, backing, hist) = jax.lax.scan(
+        step, (tags0, age0, jnp.int32(0)), page_ids
+    )
+    return SimTrace(probes, misses, hits, unal, backing, jnp.sum(hist, axis=0))
+
+
+@partial(jax.jit, static_argnames=("n_slots",))
+def simulate_unified(chain: Chain, page_ids: jax.Array, n_slots: int) -> SimTrace:
+    """Sequentially simulate the sQEMU unified cache over a request stream.
+
+    One probe per request; the active volume's copied-forward L2 entry is
+    directly usable (ptr + backing_file_index), so data living in a backing
+    file costs a ``backing_read`` but never a chain walk.
+    """
+    spec = chain.spec
+    page_ids = page_ids.astype(jnp.int32)
+    active = chain.length - 1
+
+    def step(carry, p):
+        tags, age, t = carry
+        slice_id = p // spec.slice_len
+
+        entry = chain.l2[active, p]                            # (2,)
+        alloc = fmt.entry_allocated(entry[None])[0]
+        bfi = fmt.entry_bfi(entry[None])[0].astype(jnp.int32)
+
+        match = tags == slice_id                               # (S,)
+        in_cache = jnp.any(match)
+        n_miss = (~in_cache).astype(jnp.int32)
+        n_hit = alloc.astype(jnp.int32)
+        n_unal = (~alloc).astype(jnp.int32)
+        backing = (alloc & (bfi != active)).astype(jnp.int32)
+
+        t = t + 1
+        age = jnp.where(match & in_cache, t, age)
+        slot = jnp.argmin(age)
+        tags = jnp.where(
+            ~in_cache, tags.at[slot].set(slice_id), tags
+        )
+        age = jnp.where(~in_cache, age.at[slot].set(t), age)
+
+        hist_r = jax.nn.one_hot(
+            jnp.where(alloc, bfi, active), spec.max_chain, dtype=jnp.int32
+        )
+        out = (jnp.int32(1), n_miss, n_hit, n_unal, backing, hist_r)
+        return (tags, age, t), out
+
+    tags0 = jnp.full((n_slots,), -1, jnp.int32)
+    age0 = jnp.full((n_slots,), -1, jnp.int32)
+    (_, _, _), (probes, misses, hits, unal, backing, hist) = jax.lax.scan(
+        step, (tags0, age0, jnp.int32(0)), page_ids
+    )
+    return SimTrace(probes, misses, hits, unal, backing, jnp.sum(hist, axis=0))
+
+
+def summarize(trace: SimTrace) -> dict:
+    return dict(
+        probes=int(jnp.sum(trace.probes)),
+        misses=int(jnp.sum(trace.misses)),
+        hits=int(jnp.sum(trace.hits)),
+        hit_unallocated=int(jnp.sum(trace.hit_unallocated)),
+        backing_reads=int(jnp.sum(trace.backing_reads)),
+    )

@@ -1,0 +1,336 @@
+"""Snapshot-chain state and snapshot/streaming operations.
+
+A ``Chain`` is the JAX-native analogue of a Qcow2 backing-file chain:
+
+* a logical "virtual disk" of ``n_pages`` pages of ``page_size`` elements;
+* up to ``max_chain`` snapshot layers. Layer ``length - 1`` is the *active
+  volume*; layers below it are immutable *backing files*;
+* per-layer L1/L2 index arrays (dense; an absent L2 table is all-zeros with
+  its L1 presence bit clear — Qcow2's unallocated-table case);
+* one global page *pool* shared by all layers (the single-HBM analogue of
+  the provider's storage backend). Pool rows are immutable once written;
+  COW writes always allocate fresh rows for the active volume.
+
+Two snapshot-creation flavours, as in the paper:
+
+* ``snapshot(chain, scalable=False)`` — vanilla Qcow2: the new active volume
+  starts empty, and reads must walk the chain (``resolve.resolve_vanilla``).
+* ``snapshot(chain, scalable=True)`` — sQEMU §5.4: the full L1/L2 table set
+  of the previous active volume is copied forward, ``backing_file_index``
+  preserved, so the new active volume indexes the entire chain and
+  ``resolve.resolve_direct`` is O(1).
+
+``stream`` implements chain compaction (the provider's "streaming" job).
+It is a host-side maintenance operation (not jitted), matching Qemu where
+streaming is a background job outside the guest I/O path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import format as fmt
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSpec:
+    """Static geometry of a chain (hashable; safe as a jit static arg)."""
+
+    n_pages: int
+    page_size: int
+    max_chain: int
+    pool_capacity: int
+    l2_per_table: int = 64  # L2 entries per L2 table (qcow2: cluster_size/8)
+    slice_len: int = 16     # cache-slice granularity, in entries (qcow2 docs)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.n_pages % self.l2_per_table != 0:
+            raise ValueError("n_pages must be a multiple of l2_per_table")
+        if self.max_chain > fmt.MAX_CHAIN_REPRESENTABLE:
+            raise ValueError("max_chain exceeds 16-bit backing_file_index")
+        if self.pool_capacity > fmt.MAX_POOL_ROWS:
+            raise ValueError("pool_capacity exceeds 28-bit page_ptr")
+        if self.l2_per_table % self.slice_len != 0:
+            raise ValueError("l2_per_table must be a multiple of slice_len")
+
+    @property
+    def n_l1(self) -> int:
+        return self.n_pages // self.l2_per_table
+
+    @property
+    def n_slices(self) -> int:
+        return self.n_pages // self.slice_len
+
+    def index_bytes_per_snapshot(self) -> int:
+        """On-disk metadata bytes added per snapshot (Eq. 2 numerator)."""
+        return self.n_pages * fmt.ENTRY_WORDS * 4 + self.n_l1 * 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Chain:
+    spec: ChainSpec = dataclasses.field(metadata=dict(static=True))
+    scalable: bool = dataclasses.field(metadata=dict(static=True))
+    l1: jax.Array          # (max_chain, n_l1) uint32 — bit0: L2 table present
+    l2: jax.Array          # (max_chain, n_pages, 2) uint32 — L2 entries
+    pool: jax.Array        # (pool_capacity, page_size) dtype
+    pool_cursor: jax.Array  # () int32 — next free pool row
+    length: jax.Array      # () int32 — #files in chain; active = length - 1
+    overflow: jax.Array    # () bool — a write ran past pool_capacity
+
+    @property
+    def active(self) -> jax.Array:
+        return self.length - 1
+
+
+def create(spec: ChainSpec, *, scalable: bool = True) -> Chain:
+    """A fresh virtual disk: chain of length 1 (a single active volume)."""
+    return Chain(
+        spec=spec,
+        scalable=scalable,
+        l1=jnp.zeros((spec.max_chain, spec.n_l1), jnp.uint32),
+        l2=fmt.empty_entries((spec.max_chain, spec.n_pages)),
+        pool=jnp.zeros((spec.pool_capacity, spec.page_size), spec.dtype),
+        pool_cursor=jnp.zeros((), jnp.int32),
+        length=jnp.ones((), jnp.int32),
+        overflow=jnp.zeros((), bool),
+    )
+
+
+@jax.jit
+def write(chain: Chain, page_ids: jax.Array, data: jax.Array) -> Chain:
+    """COW write of whole pages to the active volume.
+
+    ``page_ids``: (B,) int32 logical page indices — must be unique within
+    the batch (cluster-aligned whole-page writes, like the Qcow2 driver's
+    cluster granularity). ``data``: (B, page_size).
+
+    Writes always allocate fresh pool rows and update only the active
+    volume's L1/L2 — backing files are immutable (Qcow2 COW semantics).
+    """
+    spec = chain.spec
+    bsz = page_ids.shape[0]
+    page_ids = page_ids.astype(jnp.int32)
+    rows = chain.pool_cursor + jnp.arange(bsz, dtype=jnp.int32)
+    overflow = chain.overflow | (rows[-1] >= spec.pool_capacity)
+    safe_rows = jnp.minimum(rows, spec.pool_capacity - 1)
+    pool = chain.pool.at[safe_rows].set(data.astype(spec.dtype))
+
+    active = chain.length - 1
+    entries = fmt.pack_entry(
+        safe_rows,
+        jnp.full((bsz,), 0, jnp.uint32) + active.astype(jnp.uint32),
+        allocated=True,
+        bfi_valid=chain.scalable,
+    )
+    l2 = chain.l2.at[active, page_ids].set(entries)
+    l1 = chain.l1.at[active, page_ids // spec.l2_per_table].set(jnp.uint32(1))
+    return dataclasses.replace(
+        chain,
+        l1=l1,
+        l2=l2,
+        pool=pool,
+        pool_cursor=chain.pool_cursor + bsz,
+        overflow=overflow,
+    )
+
+
+@partial(jax.jit, static_argnames=("scalable",))
+def _snapshot_impl(chain: Chain, scalable: bool) -> Chain:
+    new = chain.length  # index the new active volume will take
+    if scalable:
+        # sQEMU §5.4: copy the previous active volume's entire L1/L2 set
+        # into the new active volume. backing_file_index is preserved, so
+        # the new volume indexes the whole chain (direct access).
+        prev_l1 = jax.lax.dynamic_index_in_dim(chain.l1, new - 1, 0)
+        prev_l2 = jax.lax.dynamic_index_in_dim(chain.l2, new - 1, 0)
+        l1 = jax.lax.dynamic_update_index_in_dim(chain.l1, prev_l1, new, 0)
+        l2 = jax.lax.dynamic_update_index_in_dim(chain.l2, prev_l2, new, 0)
+    else:
+        # vanilla Qcow2: the new active volume starts with no tables at all
+        # (layers above `length` are still all-zeros by construction).
+        l1, l2 = chain.l1, chain.l2
+    return dataclasses.replace(chain, l1=l1, l2=l2, length=chain.length + 1)
+
+
+def snapshot(chain: Chain, *, scalable: bool | None = None) -> Chain:
+    """Freeze the active volume as a backing file; open a new active volume.
+
+    ``scalable=None`` follows the chain's format flag. Passing an explicit
+    value models mixed deployments (e.g. a vanilla tool snapshotting a
+    scalable image: the copy-forward is skipped, and readers of pages
+    written afterwards simply fall back to the chain walk — backward
+    compatibility per paper §5.1).
+    """
+    if scalable is None:
+        scalable = chain.scalable
+    return _snapshot_impl(chain, scalable)
+
+
+def snapshot_cost_model(spec: ChainSpec) -> dict:
+    """Paper Eq. 2: per-snapshot metadata overhead of the scalable format.
+
+    S_sq = S_vq + disk_size / cluster_size * l2_entry_size
+    """
+    l2_entry_size = fmt.ENTRY_WORDS * 4
+    extra = spec.n_pages * l2_entry_size + spec.n_l1 * 4
+    return dict(
+        vanilla_bytes=spec.n_l1 * 4,     # header+L1 only (refcounts elided)
+        scalable_bytes=spec.n_l1 * 4 + extra,
+        extra_bytes=extra,
+    )
+
+
+def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
+    """Compact layers ``[0, merge_upto]`` into a single base layer.
+
+    Host-side maintenance op (uses the concrete chain length; not jittable).
+    ``copy_data=True`` rewrites merged pages into fresh pool rows, modelling
+    the real streaming job's data movement (the source of the paper's
+    observed 100x guest-latency hit during streaming); ``False`` merges
+    metadata only (pool rows are immutable and global, so this is safe).
+    """
+    spec = chain.spec
+    length = int(chain.length)
+    if not (0 <= merge_upto < length - 1):
+        raise ValueError("can only merge strictly below the active volume")
+    k = merge_upto + 1  # number of layers merged into one
+
+    sub = chain.l2[:k]                                   # (k, n_pages, 2)
+    alloc = fmt.entry_allocated(sub)                     # (k, n_pages)
+    idx = jnp.arange(k, dtype=jnp.int32)[:, None]
+    owner = jnp.max(jnp.where(alloc, idx, -1), axis=0)   # (n_pages,)
+    found = owner >= 0
+    safe_owner = jnp.maximum(owner, 0)
+    merged = jnp.take_along_axis(sub, safe_owner[None, :, None], axis=0)[0]
+
+    ptr = fmt.entry_ptr(merged)
+    cursor = chain.pool_cursor
+    pool = chain.pool
+    if copy_data:
+        # Rewrite surviving merged pages to fresh rows (data movement).
+        n_live = int(jnp.sum(found))
+        live_pages = jnp.nonzero(found, size=spec.n_pages, fill_value=0)[0]
+        live = live_pages[:n_live]
+        src_rows = ptr[live].astype(jnp.int32)
+        dst_rows = int(cursor) + jnp.arange(n_live, dtype=jnp.int32)
+        if n_live and int(dst_rows[-1]) >= spec.pool_capacity:
+            raise RuntimeError("pool overflow during streaming")
+        pool = pool.at[dst_rows].set(pool[src_rows])
+        ptr = ptr.at[live].set(dst_rows.astype(jnp.uint32))
+        cursor = cursor + n_live
+
+    # Renumber: merged base takes bfi 0; upper layer s (> merge_upto)
+    # becomes s - merge_upto. Entries inside upper layers that point below
+    # the merge point collapse onto bfi 0.
+    merged_entries = fmt.pack_entry(
+        ptr, jnp.zeros_like(ptr), allocated=found, bfi_valid=chain.scalable,
+        zero=fmt.entry_zero(merged),
+    )
+
+    n_upper = length - k
+    upper_l2 = chain.l2[k:k + n_upper]
+    upper_l1 = chain.l1[k:k + n_upper]
+    old_bfi = fmt.entry_bfi(upper_l2).astype(jnp.int32)
+    new_bfi = jnp.maximum(old_bfi - merge_upto, 0)
+    upper_alloc = fmt.entry_allocated(upper_l2)
+    upper_ptr = fmt.entry_ptr(upper_l2)
+    if copy_data:
+        # Upper entries whose owner was merged must point at the new rows.
+        points_below = upper_alloc & (old_bfi <= merge_upto)
+        upper_ptr = jnp.where(points_below, ptr[None, :], upper_ptr)
+    upper_l2 = fmt.pack_entry(
+        upper_ptr, new_bfi, allocated=upper_alloc,
+        bfi_valid=fmt.entry_bfi_valid(upper_l2),
+        zero=fmt.entry_zero(upper_l2),
+    )
+
+    new_len = 1 + n_upper
+    l2 = fmt.empty_entries((spec.max_chain, spec.n_pages))
+    l2 = l2.at[0].set(merged_entries)
+    l2 = l2.at[1:1 + n_upper].set(upper_l2)
+    l1 = jnp.zeros((spec.max_chain, spec.n_l1), jnp.uint32)
+    merged_l1 = jnp.max(chain.l1[:k], axis=0)
+    l1 = l1.at[0].set(merged_l1)
+    l1 = l1.at[1:1 + n_upper].set(upper_l1)
+    return dataclasses.replace(
+        chain,
+        l1=l1,
+        l2=l2,
+        pool=pool,
+        pool_cursor=jnp.asarray(cursor, jnp.int32),
+        length=jnp.asarray(new_len, jnp.int32),
+    )
+
+
+def compact_pool(chain: Chain) -> Chain:
+    """Garbage-collect the page pool: keep only rows referenced by live
+    L2 entries, remap pointers, reset the allocation cursor.
+
+    Host-side maintenance op (like streaming). COW stores leak pool rows
+    whenever a page is overwritten or a chain is streamed; the provider's
+    background GC reclaims them. Content of every read is unchanged
+    (property-tested).
+    """
+    import numpy as np
+
+    spec = chain.spec
+    length = int(chain.length)
+    entries = chain.l2[:length]                       # (L, n_pages, 2)
+    alloc = np.asarray(fmt.entry_allocated(entries))
+    rows = np.asarray(fmt.entry_ptr(entries))
+    used = np.unique(rows[alloc])
+    lut = np.zeros(spec.pool_capacity, np.uint32)
+    lut[used] = np.arange(len(used), dtype=np.uint32)
+
+    new_pool = jnp.zeros_like(chain.pool)
+    if len(used):
+        new_pool = new_pool.at[: len(used)].set(
+            chain.pool[jnp.asarray(used, jnp.int32)]
+        )
+    new_ptr = jnp.asarray(lut[rows], jnp.uint32)
+    new_entries = fmt.pack_entry(
+        new_ptr,
+        fmt.entry_bfi(entries),
+        allocated=jnp.asarray(alloc),
+        bfi_valid=fmt.entry_bfi_valid(entries),
+        zero=fmt.entry_zero(entries),
+    )
+    l2 = chain.l2.at[:length].set(new_entries)
+    return dataclasses.replace(
+        chain,
+        l2=l2,
+        pool=new_pool,
+        pool_cursor=jnp.asarray(len(used), jnp.int32),
+        overflow=jnp.zeros((), bool),
+    )
+
+
+def convert_to_scalable(chain: Chain) -> Chain:
+    """Offline conversion of a vanilla-format chain to the scalable format.
+
+    Models the paper's image-conversion path for adoption (§5.1): resolves
+    every page through the chain walk once and writes a fully flattened,
+    bfi-stamped L1/L2 set into the active volume.
+    """
+    from repro.core import resolve  # local import to avoid a cycle
+
+    spec = chain.spec
+    res = resolve.resolve_vanilla(chain, jnp.arange(spec.n_pages, dtype=jnp.int32))
+    entries = fmt.pack_entry(
+        res.ptr, res.owner.astype(jnp.uint32),
+        allocated=res.found, bfi_valid=True, zero=res.zero,
+    )
+    active = int(chain.length) - 1
+    l2 = chain.l2.at[active].set(entries)
+    table_alloc = jnp.max(
+        res.found.reshape(spec.n_l1, spec.l2_per_table), axis=1
+    ).astype(jnp.uint32)
+    l1 = chain.l1.at[active].set(table_alloc)
+    return dataclasses.replace(chain, l1=l1, l2=l2, scalable=True)

@@ -1,0 +1,108 @@
+"""Bit-level layout of SnapStore L2 index entries.
+
+This mirrors the paper's extension of the Qcow2 format (sQEMU, §5.2): each
+L2 entry describes one data cluster ("page" here) and carries, in previously
+reserved bits, a 16-bit ``backing_file_index`` identifying the snapshot in
+the chain that owns the latest valid version of the page.
+
+An entry is two little words of uint32 (the on-disk Qcow2 entry is 64-bit;
+we keep two u32 words to stay in JAX's default 32-bit world):
+
+``word0`` (data pointer + cluster flags)::
+
+    bits [0, 28)   page_ptr   — row index into the global page pool
+    bit  28        ENCRYPTED  — feature-preservation flag (carried, not used)
+    bit  29        COMPRESSED — feature-preservation flag (carried, not used)
+    bit  30        ZERO       — "reads as zeros" cluster (qcow2 v3 feature)
+    bit  31        ALLOCATED  — entry describes an allocated page
+
+``word1`` (sQEMU extension; all-zero in vanilla-format images)::
+
+    bits [0, 16)   backing_file_index (bfi) — per paper §5.2, 16 bits
+    bit  16        BFI_VALID — set iff the image was written/converted in
+                   scalable (sQEMU) format. Vanilla images leave word1 = 0,
+                   which is how backward compatibility is preserved: a
+                   scalable reader falls back to the chain walk when this
+                   bit is unset, and a vanilla reader ignores word1 entirely.
+
+The all-zeros entry means "unallocated", exactly as in Qcow2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ENTRY_WORDS = 2
+
+PTR_BITS = 28
+PTR_MASK = (1 << PTR_BITS) - 1
+
+FLAG_ENCRYPTED = 1 << 28
+FLAG_COMPRESSED = 1 << 29
+FLAG_ZERO = 1 << 30
+FLAG_ALLOCATED = 1 << 31
+
+BFI_BITS = 16  # paper §5.2: "We use 16 bits to encode backing_file_index"
+BFI_MASK = (1 << BFI_BITS) - 1
+FLAG_BFI_VALID = 1 << BFI_BITS
+
+MAX_CHAIN_REPRESENTABLE = 1 << BFI_BITS
+MAX_POOL_ROWS = 1 << PTR_BITS
+
+_U32 = jnp.uint32
+
+
+def pack_entry(ptr, bfi, *, allocated, bfi_valid, zero=False):
+    """Pack entry fields into a ``(..., 2) uint32`` array.
+
+    ``ptr``/``bfi`` are integer arrays (broadcastable); ``allocated``,
+    ``bfi_valid``, ``zero`` are boolean arrays or python bools.
+    """
+    ptr = jnp.asarray(ptr, _U32) & _U32(PTR_MASK)
+    bfi = jnp.asarray(bfi, _U32) & _U32(BFI_MASK)
+    allocated = jnp.asarray(allocated, bool)
+    bfi_valid = jnp.asarray(bfi_valid, bool)
+    zero = jnp.asarray(zero, bool)
+    w0 = ptr | jnp.where(allocated, _U32(FLAG_ALLOCATED), _U32(0))
+    w0 = w0 | jnp.where(zero, _U32(FLAG_ZERO), _U32(0))
+    w1 = bfi | jnp.where(bfi_valid, _U32(FLAG_BFI_VALID), _U32(0))
+    # An unallocated entry is all-zeros (Qcow2 convention).
+    w0 = jnp.where(allocated, w0, _U32(0))
+    w1 = jnp.where(allocated, w1, _U32(0))
+    return jnp.stack([w0, w1], axis=-1)
+
+
+def empty_entries(shape):
+    """All-zero (unallocated) entries of the given leading shape."""
+    return jnp.zeros(tuple(shape) + (ENTRY_WORDS,), dtype=_U32)
+
+
+def entry_ptr(entries):
+    return entries[..., 0] & _U32(PTR_MASK)
+
+
+def entry_allocated(entries):
+    return (entries[..., 0] & _U32(FLAG_ALLOCATED)) != 0
+
+
+def entry_zero(entries):
+    return (entries[..., 0] & _U32(FLAG_ZERO)) != 0
+
+
+def entry_bfi(entries):
+    return entries[..., 1] & _U32(BFI_MASK)
+
+
+def entry_bfi_valid(entries):
+    return (entries[..., 1] & _U32(FLAG_BFI_VALID)) != 0
+
+
+def strip_extension(entries):
+    """Return the vanilla-format view of scalable entries (word1 zeroed).
+
+    This is what a vanilla (pre-sQEMU) driver sees: the extension lives in
+    reserved bits it never reads. Used by backward-compatibility tests.
+    """
+    w0 = entries[..., 0]
+    w1 = jnp.zeros_like(entries[..., 1])
+    return jnp.stack([w0, w1], axis=-1)

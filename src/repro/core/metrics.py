@@ -1,0 +1,89 @@
+"""Analytical cost models from the paper (Eq. 1, Eq. 2) + latency mapping.
+
+Eq. 1 — average lookup cost on a chain of length N::
+
+    Y = [(Hit% * T_M) + (Miss% * (T_D + T_L + T_F)) + (UnAl% * T_F)] * N
+
+with T_M the RAM access time (~100 ns), T_D the disk access time (~80 us),
+T_L the software/network traversal time (~1 us) and T_F the per-event
+driver overhead (~1 us; unnamed constant in the paper). On TPU the same
+structure holds with T_M ≈ VMEM hit, T_D ≈ HBM page fetch, T_L ≈ kernel
+dispatch; the *shape* (linear in N for vanilla, N-independent for direct)
+is the claim being reproduced, so the constants are parameters.
+
+Eq. 2 — per-snapshot metadata overhead of the scalable format::
+
+    S_sq = S_vq + disk_size / cluster_size * l2_entry_size
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import format as fmt
+from repro.core.cache import SimTrace
+from repro.core.chain import ChainSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CostConstants:
+    """Timing constants (seconds). Defaults are the paper's host values."""
+
+    t_m: float = 100e-9   # cache/RAM probe
+    t_d: float = 80e-6    # backing-store (disk/HBM) access
+    t_l: float = 1e-6     # software + network layers
+    t_f: float = 1e-6     # per hit-unallocated driver overhead
+
+
+def eq1_average_cost(
+    hit_pct: float,
+    miss_pct: float,
+    unal_pct: float,
+    chain_length: int,
+    c: CostConstants = CostConstants(),
+) -> float:
+    """Paper Eq. 1, verbatim."""
+    return (
+        hit_pct * c.t_m
+        + miss_pct * (c.t_d + c.t_l + c.t_f)
+        + unal_pct * c.t_f
+    ) * chain_length
+
+
+def eq2_snapshot_overhead_bytes(
+    disk_size_bytes: int,
+    cluster_size_bytes: int = 64 * 1024,
+    l2_entry_size: int = 8,
+    s_vq_bytes: int = 256 * 1024,
+) -> int:
+    """Paper Eq. 2: size of a fresh scalable snapshot file."""
+    return s_vq_bytes + (disk_size_bytes // cluster_size_bytes) * l2_entry_size
+
+
+def trace_latencies(trace: SimTrace, c: CostConstants = CostConstants()):
+    """Per-request modelled lookup latency (seconds) from simulated events.
+
+    Every probe costs a T_M, every slice fetch a T_D + T_L, every
+    hit-unallocated a T_F — the event-level form of Eq. 1 (which is its
+    expectation over a request stream).
+    """
+    return (
+        trace.probes.astype(jnp.float64 if False else jnp.float32) * c.t_m
+        + trace.misses.astype(jnp.float32) * (c.t_d + c.t_l)
+        + trace.hit_unallocated.astype(jnp.float32) * c.t_f
+    )
+
+
+def index_bytes(spec: ChainSpec, chain_length: int, *, scalable: bool) -> int:
+    """On-disk index metadata bytes for a whole chain (Fig 19a analogue).
+
+    Vanilla snapshots carry only L1 (+ lazily allocated L2 tables — we
+    count the worst case, as the paper's model does); scalable snapshots
+    always carry the full copied-forward L2 set.
+    """
+    l1 = spec.n_l1 * 4
+    l2_full = spec.n_pages * fmt.ENTRY_WORDS * 4
+    per_snapshot = l1 + l2_full if scalable else l1
+    return chain_length * per_snapshot

@@ -1,0 +1,97 @@
+"""VirtualTensorStore: the user-facing COW snapshot store.
+
+High-level API over ``chain.py``/``resolve.py``: whole-page reads and
+writes with copy-on-write semantics, snapshotting, streaming compaction and
+chain-length accounting. Everything on the read/write path is jittable; the
+maintenance path (streaming, conversion) is host-side, as in Qemu.
+
+This is the substrate both integrations build on:
+
+* ``repro.checkpoint`` stores training state as pages and snapshots the
+  store at every checkpoint — an incremental (delta) checkpoint chain;
+* ``repro.kvcache`` stores KV pages and snapshots at sequence-fork points —
+  a prefix-sharing chain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chain as chain_lib
+from repro.core import resolve as resolve_lib
+from repro.core.chain import Chain, ChainSpec
+
+
+@partial(jax.jit, static_argnames=("method",))
+def read(chain: Chain, page_ids: jax.Array, *, method: str = "auto"):
+    """Read whole pages. Unallocated or ZERO pages read as zeros.
+
+    Returns ``(data (B, page_size), ResolveResult)``.
+    """
+    res = resolve_lib.get_resolver(method)(chain, page_ids)
+    rows = jnp.where(res.found & ~res.zero, res.ptr, 0).astype(jnp.int32)
+    data = chain.pool[rows]
+    ok = (res.found & ~res.zero)[:, None]
+    return jnp.where(ok, data, jnp.zeros_like(data)), res
+
+
+write = chain_lib.write
+snapshot = chain_lib.snapshot
+stream = chain_lib.stream
+convert_to_scalable = chain_lib.convert_to_scalable
+
+
+def create(
+    n_pages: int,
+    page_size: int,
+    *,
+    max_chain: int = 64,
+    pool_capacity: int | None = None,
+    scalable: bool = True,
+    dtype=jnp.float32,
+    l2_per_table: int = 64,
+    slice_len: int = 16,
+) -> Chain:
+    """Convenience constructor with sane defaults for tests/examples."""
+    if pool_capacity is None:
+        pool_capacity = 4 * n_pages
+    spec = ChainSpec(
+        n_pages=n_pages,
+        page_size=page_size,
+        max_chain=max_chain,
+        pool_capacity=pool_capacity,
+        l2_per_table=l2_per_table,
+        slice_len=slice_len,
+        dtype=dtype,
+    )
+    return chain_lib.create(spec, scalable=scalable)
+
+
+def chain_length(chain: Chain) -> int:
+    return int(chain.length)
+
+
+def allocated_mask(chain: Chain, *, method: str = "auto") -> jax.Array:
+    """(n_pages,) bool: which logical pages currently hold data."""
+    ids = jnp.arange(chain.spec.n_pages, dtype=jnp.int32)
+    res = resolve_lib.get_resolver(method)(chain, ids)
+    return res.found
+
+
+def materialize(chain: Chain, *, method: str = "auto") -> jax.Array:
+    """Read the full virtual disk: (n_pages, page_size). The 'dd' op."""
+    ids = jnp.arange(chain.spec.n_pages, dtype=jnp.int32)
+    data, _ = read(chain, ids, method=method)
+    return data
+
+
+def check_pool_capacity(chain: Chain) -> None:
+    """Raise if any write overflowed the pool (host-side guard)."""
+    if bool(chain.overflow):
+        raise RuntimeError(
+            "page pool overflow: grow ChainSpec.pool_capacity or stream the chain"
+        )

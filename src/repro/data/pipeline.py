@@ -1,0 +1,76 @@
+"""Deterministic synthetic data pipeline.
+
+``batch_at(step)`` is a pure function of (seed, step) — any worker can
+reproduce any batch, which is what makes checkpoint/restart and elastic
+re-slicing trivial: the pipeline "state" is just the step counter, carried
+inside the checkpointed training state. Per-host sharding slices the
+global batch by process index (single-process here, but the slicing logic
+is exercised by tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    pattern: str = "lcg"   # "lcg" (learnable recurrence) | "uniform"
+    n_processes: int = 1
+    process_index: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_processes == 0
+        return self.global_batch // self.n_processes
+
+
+def batch_at(cfg: DataConfig, step: int, *, with_frames: int = 0,
+             d_model: int = 0):
+    """Global batch for ``step``, sliced to this process.
+
+    Tokens follow a noisy affine recurrence (``pattern="lcg"``):
+    ``t_{i+1} = (a·t_i + c) mod V`` with probability 0.9, uniform noise
+    otherwise — *learnable* structure, so example training curves actually
+    descend below the uniform-entropy floor. ``pattern="uniform"`` gives
+    pure iid tokens (benchmarks)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    kt, kf = jax.random.split(key)
+    if cfg.pattern == "uniform":
+        tokens = jax.random.randint(
+            kt, (cfg.global_batch, cfg.seq_len), 0, cfg.vocab_size,
+            dtype=jnp.int32)
+    else:
+        k0, kn, km = jax.random.split(kt, 3)
+        start = jax.random.randint(k0, (cfg.global_batch,), 0,
+                                   cfg.vocab_size, dtype=jnp.int32)
+        noise = jax.random.randint(kn, (cfg.global_batch, cfg.seq_len), 0,
+                                   cfg.vocab_size, dtype=jnp.int32)
+        keep = jax.random.uniform(km, (cfg.global_batch, cfg.seq_len)) < 0.9
+        a, c = 31, 17
+
+        def step_fn(tok, inp):
+            nz, kp = inp
+            nxt = jnp.where(kp, (a * tok + c) % cfg.vocab_size, nz)
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(
+            step_fn, start,
+            (noise.T, keep.T))
+        tokens = jnp.concatenate([start[:, None], seq.T[:, :-1]], axis=1)
+    lo = cfg.process_index * cfg.local_batch
+    tokens = tokens[lo:lo + cfg.local_batch]
+    batch = dict(tokens=tokens, labels=jnp.roll(tokens, -1, axis=1))
+    if with_frames:
+        frames = jax.random.normal(
+            kf, (cfg.global_batch, with_frames, d_model), jnp.float32
+        )[lo:lo + cfg.local_batch]
+        batch["frames"] = frames
+    return batch

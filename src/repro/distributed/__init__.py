@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, meshes, collectives, compression."""

@@ -1,0 +1,235 @@
+"""Logical-axis sharding: DP/FSDP/TP/EP/SP rules → PartitionSpecs.
+
+Model code annotates activations with *logical* axis names
+(``lshard(x, "batch", "seq", "embed")``); the launcher activates a rule set
+mapping logical names to mesh axes. With no active rules (unit tests,
+single-device smoke runs) every annotation is a no-op.
+
+Rules ship in two flavours keyed by the production meshes
+(DESIGN.md §5):
+
+* single-pod ``(data=16, model=16)``: batch/fsdp → ``data``; tensor/expert/
+  sequence parallel → ``model``.
+* multi-pod ``(pod=2, data=16, model=16)``: batch additionally shards over
+  ``pod`` (pure DP across pods; ZeRO stays within a pod so optimizer-state
+  all-gathers never cross the inter-pod links).
+
+Divisibility guard: a dimension that does not divide by the mapped mesh
+axes is silently left unsharded (e.g. whisper's 8 heads on a 16-way model
+axis). This keeps one rule set valid for all 10 architectures.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_axis_size(mesh, a) for a in axis)
+    return mesh.shape[axis]
+
+
+class Rules:
+    """Mapping: logical axis name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, mapping: dict, mesh: Mesh):
+        self.mapping = dict(mapping)
+        self.mesh = mesh
+
+    def resolve(self, name: Optional[str], dim_size: Optional[int] = None):
+        if name is None:
+            return None
+        axis = self.mapping.get(name)
+        if axis is None:
+            return None
+        if isinstance(axis, (tuple, list)):
+            axis = tuple(a for a in axis if a in self.mesh.axis_names)
+            if not axis:
+                return None
+        elif axis not in self.mesh.axis_names:
+            return None
+        if dim_size is not None:
+            size = _axis_size(self.mesh, axis)
+            if size == 0 or dim_size % size != 0:
+                return None  # divisibility guard: leave unsharded
+        return tuple(axis) if isinstance(axis, (tuple, list)) else axis
+
+    def spec(self, names: Sequence[Optional[str]], shape=None) -> P:
+        dims = list(shape) if shape is not None else [None] * len(names)
+        out, used = [], set()
+        for n, d in zip(names, dims):
+            axis = self.resolve(n, d)
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            if axis is None or any(a in used for a in axes):
+                out.append(None)  # a mesh axis may appear at most once
+                continue
+            used.update(axes)
+            out.append(axis)
+        return P(*out)
+
+
+def make_rules(mesh: Mesh, *, seq_shard: bool = False) -> Rules:
+    mapping = {
+        "batch": ("pod", "data"),
+        # SP: sharding the sequence dim of the residual stream over the
+        # model axis divides saved-activation memory by |model| at the cost
+        # of per-layer activation all-gathers around attention (perf knob,
+        # see EXPERIMENTS.md §Perf)
+        "seq": "model" if seq_shard else None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "fsdp": "data",          # ZeRO param/optimizer sharding (intra-pod)
+        "expert": "model",       # EP shares the model axis
+        "dispatch": ("pod", "data"),
+        "kv_seq": "model",       # decode KV caches: sequence-sharded
+        "frames": None,
+        "ssm_heads": "model",
+        "state": None,
+    }
+    return Rules(mapping, mesh)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+def lshard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the active logical sharding; no-op without rules."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = rules.spec(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding: name-based rules over the trailing dims of each leaf
+# ---------------------------------------------------------------------------
+
+# leaf-name -> logical names of the *trailing* dims. Leading (stacked-layer,
+# expert, group) dims are padded with None unless matched by a 3-dim rule.
+_PARAM_RULES: dict[str, tuple] = {
+    # attention
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"),
+    "wo": ("heads", "fsdp"),
+    # mlp
+    "w_up": ("fsdp", "ff"),
+    "w_gate": ("fsdp", "ff"),
+    "w_down": ("ff", "fsdp"),
+    # embeddings / head
+    "embed": ("vocab", "fsdp"),
+    "w_out": ("fsdp", "vocab"),
+    "pos_embed": (None, "fsdp"),
+    # moe (leading expert dim matched by rank-3 lookup below)
+    "router": ("fsdp", None),
+    "e_up": ("expert", "fsdp", None),
+    "e_gate": ("expert", "fsdp", None),
+    "e_down": ("expert", None, "fsdp"),
+    # ssm / rwkv
+    "in_proj": ("fsdp", "ff"),
+    "out_proj": ("ff", "fsdp"),
+    "w_r": ("fsdp", "ff"),
+    "w_k": ("fsdp", "ff"),
+    "w_v": ("fsdp", "ff"),
+    "w_g": ("fsdp", "ff"),
+    "wk_ff": ("fsdp", "ff"),
+    "wv_ff": ("ff", "fsdp"),
+    "wr_ff": ("fsdp", None),
+}
+
+
+# decode/prefill cache leaves, matched by name + rank (trailing dims rule)
+_CACHE_RULES: dict[str, tuple] = {
+    "k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    "xk": (None, "batch", None, "kv_heads", "head_dim"),
+    "xv": (None, "batch", None, "kv_heads", "head_dim"),
+    "conv": (None, "batch", None, None),
+    "ssm": (None, "batch", "ssm_heads", None, None),
+    "state": (None, "batch", "ssm_heads", None, None),
+    "att_shift": (None, "batch", None),
+    "ffn_shift": (None, "batch", None),
+    "pos": (),
+}
+
+
+def cache_specs(cache: Any, rules: Rules) -> Any:
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        rule = _CACHE_RULES.get(name)
+        if rule is None or len(rule) != len(leaf.shape):
+            rule = (None,) * len(leaf.shape)
+        return rules.spec(rule, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def batch_spec(batch: Any, rules: Rules) -> Any:
+    """Model inputs: shard axis 0 (global batch) over the DP axes."""
+    return jax.tree.map(
+        lambda leaf: rules.spec(
+            ("batch",) + (None,) * (len(leaf.shape) - 1), leaf.shape
+        ),
+        batch,
+    )
+
+
+def param_spec(path: str, shape: tuple, rules: Rules) -> P:
+    leaf = path.split("/")[-1]
+    rule = _PARAM_RULES.get(leaf)
+    if rule is None or len(shape) < len(rule):
+        return P(*([None] * len(shape)))
+    pad = len(shape) - len(rule)
+    names = (None,) * pad + tuple(rule)
+    return rules.spec(names, shape)
+
+
+def param_specs(params: Any, rules: Rules) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def visit(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        return param_spec(name, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_shardings(params: Any, rules: Rules) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        param_specs(params, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )

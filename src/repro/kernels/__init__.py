@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+* chain_resolve — vanilla first-hit chain walk vs sQEMU direct lookup
+* cow_gather — resolved-page HBM gather (scalar-prefetch DMA pattern)
+* paged_attention — decode attention over paged KV w/ direct block tables
+* stream_merge — streaming-compaction select-latest merge
+"""

@@ -1,0 +1,106 @@
+"""Pallas TPU kernels for chain resolution.
+
+The vanilla path is the paper's chain walk recast for a TPU: instead of a
+pointer chase per request (host Qemu), a *batch* of page ids is resolved by
+a first-hit reduction over the chain axis. The allocation bitmap tile
+(C × Tn) is staged HBM→VMEM by the BlockSpec; the chain axis is reduced
+in-kernel with a fori loop, so the bytes-touched cost remains O(C) per
+page — faithfully the vanilla cost model. The direct kernel touches one
+layer: O(1).
+
+Tiling: pages are tiled along the lane dimension (multiples of 128); the
+chain axis lives in the sublane dimension of the same VMEM tile.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PAGE_TILE = 512  # lanes per grid step (4 × 128)
+
+
+def _vanilla_kernel(length_ref, alloc_ref, ptr_ref, owner_ref, out_ptr_ref):
+    c = alloc_ref.shape[0]
+    length = length_ref[0]
+
+    owner = jnp.full((1, alloc_ref.shape[1]), -1, jnp.int32)
+    ptr = jnp.zeros((1, alloc_ref.shape[1]), jnp.uint32)
+
+    def body(i, carry):
+        owner, ptr = carry
+        # walk from the active volume (length-1) downwards
+        layer = length - 1 - i
+        valid = (layer >= 0) & (layer < c)
+        idx = jnp.maximum(layer, 0)
+        a = (alloc_ref[idx, :] != 0) & valid
+        hit = a & (owner[0] < 0)
+        owner = owner.at[0].set(jnp.where(hit, layer, owner[0]))
+        ptr = ptr.at[0].set(jnp.where(hit, ptr_ref[idx, :], ptr[0]))
+        return owner, ptr
+
+    owner, ptr = jax.lax.fori_loop(0, c, body, (owner, ptr))
+    owner_ref[...] = owner
+    out_ptr_ref[...] = ptr
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def resolve_vanilla_pallas(alloc, ptrs, length, *, interpret: bool = True):
+    """alloc/ptrs: (C, N); length scalar. N must be a multiple of 128."""
+    c, n = alloc.shape
+    n_tiles = pl.cdiv(n, PAGE_TILE)
+    tile = min(PAGE_TILE, n)
+    owner, ptr = pl.pallas_call(
+        _vanilla_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((c, tile), lambda i, ln: (0, i)),
+                pl.BlockSpec((c, tile), lambda i, ln: (0, i)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, tile), lambda i, ln: (0, i)),
+                pl.BlockSpec((1, tile), lambda i, ln: (0, i)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32)[None], alloc.astype(jnp.uint32),
+      ptrs.astype(jnp.uint32))
+    return owner[0], ptr[0]
+
+
+def _direct_kernel(alloc_ref, bfi_ref, ptr_ref, owner_ref, out_ptr_ref):
+    a = alloc_ref[...] != 0
+    owner_ref[...] = jnp.where(a, bfi_ref[...].astype(jnp.int32), -1)
+    out_ptr_ref[...] = jnp.where(a, ptr_ref[...], jnp.uint32(0))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def resolve_direct_pallas(alloc_active, bfi_active, ptrs_active, *,
+                          interpret: bool = True):
+    """All inputs (N,). One VMEM pass over the active layer only."""
+    n = alloc_active.shape[0]
+    tile = min(PAGE_TILE, n)
+    spec2 = pl.BlockSpec((1, tile), lambda i: (0, i))
+    owner, ptr = pl.pallas_call(
+        _direct_kernel,
+        grid=(pl.cdiv(n, tile),),
+        in_specs=[spec2, spec2, spec2],
+        out_specs=[spec2, spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(alloc_active.astype(jnp.uint32)[None], bfi_active.astype(jnp.uint32)[None],
+      ptrs_active.astype(jnp.uint32)[None])
+    return owner[0], ptr[0]

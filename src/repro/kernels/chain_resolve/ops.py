@@ -1,0 +1,45 @@
+"""Jitted wrappers for chain resolution: Pallas on TPU, oracle elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chain_resolve import ref
+from repro.kernels.chain_resolve.chain_resolve import (
+    resolve_direct_pallas,
+    resolve_vanilla_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_pages(x, multiple=128):
+    n = x.shape[-1]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+def resolve_vanilla(alloc, ptrs, length):
+    """(C, N) chain walk. Dispatches Pallas (TPU) / interpret-validated ref."""
+    if _on_tpu():
+        alloc_p, n = _pad_pages(alloc)
+        ptrs_p, _ = _pad_pages(ptrs)
+        owner, ptr = resolve_vanilla_pallas(alloc_p, ptrs_p, length,
+                                            interpret=False)
+        return owner[:n], ptr[:n]
+    return ref.resolve_vanilla_ref(alloc, ptrs, length)
+
+
+def resolve_direct(alloc_active, bfi_active, ptrs_active):
+    if _on_tpu():
+        a, n = _pad_pages(alloc_active)
+        b, _ = _pad_pages(bfi_active)
+        p, _ = _pad_pages(ptrs_active)
+        owner, ptr = resolve_direct_pallas(a, b, p, interpret=False)
+        return owner[:n], ptr[:n]
+    return ref.resolve_direct_ref(alloc_active, bfi_active, ptrs_active)

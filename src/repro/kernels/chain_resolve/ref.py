@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for chain resolution (vanilla first-hit scan + direct)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def resolve_vanilla_ref(alloc, ptrs, length):
+    """First allocated layer from the top of the chain.
+
+    alloc: (C, N) bool/int — per-layer allocation map for N pages.
+    ptrs:  (C, N) uint32 — per-layer pool pointers.
+    length: scalar int — live chain length (layers >= length are dead).
+
+    Returns (owner (N,) int32 [-1 if absent], ptr (N,) uint32).
+    """
+    c = alloc.shape[0]
+    live = jnp.arange(c, dtype=jnp.int32)[:, None] < length
+    a = (alloc != 0) & live
+    idx = jnp.arange(c, dtype=jnp.int32)[:, None]
+    owner = jnp.max(jnp.where(a, idx, -1), axis=0)
+    ptr = jnp.take_along_axis(ptrs, jnp.maximum(owner, 0)[None], axis=0)[0]
+    ptr = jnp.where(owner >= 0, ptr, 0)
+    return owner.astype(jnp.int32), ptr.astype(jnp.uint32)
+
+
+def resolve_direct_ref(alloc_active, bfi_active, ptrs_active):
+    """sQEMU direct access: one lookup of the active volume's entries.
+
+    All inputs (N,). Returns (owner (N,) int32, ptr (N,) uint32).
+    """
+    owner = jnp.where(alloc_active != 0, bfi_active.astype(jnp.int32), -1)
+    ptr = jnp.where(alloc_active != 0, ptrs_active, 0)
+    return owner.astype(jnp.int32), ptr.astype(jnp.uint32)

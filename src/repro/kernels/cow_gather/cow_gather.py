@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: gather resolved pages from the HBM pool.
+
+The classic scalar-prefetch dynamic-gather pattern: the resolved row ids
+are prefetched as scalars, and each grid step's BlockSpec index_map picks
+the pool row to stage into VMEM — the gather is free at the memory-system
+level (one HBM→VMEM DMA per page, no scatter/gather ALU work). Rows of
+``page_size`` are lane-aligned (pad to 128).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(rows_ref, found_ref, pool_ref, out_ref):
+    i = pl.program_id(0)
+    ok = found_ref[i] != 0
+    out_ref[...] = jnp.where(ok, pool_ref[...], jnp.zeros_like(pool_ref[...]))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_pallas(pool, rows, found, *, interpret: bool = True):
+    """pool: (R, P); rows: (B,); found: (B,) → (B, P)."""
+    r, p = pool.shape
+    b = rows.shape[0]
+    safe_rows = jnp.where(found, rows, 0).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda i, rows_ref, found_ref: (rows_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda i, rows_ref, found_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p), pool.dtype),
+        interpret=interpret,
+    )(safe_rows, found.astype(jnp.int32), pool)
+    return out

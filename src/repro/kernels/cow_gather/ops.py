@@ -1,0 +1,19 @@
+"""Jitted wrapper: full read path = resolve + gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cow_gather import ref
+from repro.kernels.cow_gather.cow_gather import gather_pallas
+
+
+def gather(pool, rows, found):
+    if jax.default_backend() == "tpu":
+        p = pool.shape[1]
+        pad = (-p) % 128
+        pool_p = jnp.pad(pool, ((0, 0), (0, pad))) if pad else pool
+        out = gather_pallas(pool_p, rows, found, interpret=False)
+        return out[:, :p]
+    return ref.gather_ref(pool, rows, found)

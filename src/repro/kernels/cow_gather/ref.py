@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the resolved-page gather (the 'dd read' hot path)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_ref(pool, rows, found):
+    """pool: (R, P); rows: (B,) int32; found: (B,) bool → (B, P).
+
+    Unresolved pages read as zeros (Qcow2 unallocated-cluster semantics).
+    """
+    safe = jnp.where(found, rows, 0).astype(jnp.int32)
+    data = pool[safe]
+    return jnp.where(found[:, None], data, jnp.zeros_like(data))

@@ -1,0 +1,15 @@
+"""Jitted wrapper for paged decode attention (Pallas on TPU, ref on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+
+
+def paged_attention(q, pool_k, pool_v, tables, lengths):
+    if jax.default_backend() == "tpu":
+        return paged_attention_pallas(q, pool_k, pool_v, tables, lengths,
+                                      interpret=False)
+    return ref.paged_attention_ref(q, pool_k, pool_v, tables, lengths)

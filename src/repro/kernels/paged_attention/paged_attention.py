@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: decode attention over a paged KV pool.
+
+The serving-side payoff of the paper's *direct access* principle: the
+block table handed to this kernel is the flattened (copy-forward) table,
+so each grid step DMAs exactly one physical KV block HBM→VMEM via the
+scalar-prefetched index map — no fork-chain walking anywhere near the
+attention inner loop.
+
+Grid: (batch, kv_blocks); the kv-block axis is innermost and sequential on
+a TPU core, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch across iterations. f32 accumulation, bf16 I/O.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, out_ref,
+                       m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    bs = k_ref.shape[1]
+    hkv = k_ref.shape[2]
+    d = q_ref.shape[2]
+    h = q_ref.shape[1]
+    g = h // hkv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    # tables entries are -1 only past ceil(length/bs), so the length mask
+    # alone is sufficient (entries were clamped to 0 for the DMA index map)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = pos < length                                  # (1,1,bs)
+
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, g, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    scores = jnp.einsum("hgd,shd->hgs", q, k)             # (Hkv,G,bs)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(valid.reshape(1, 1, bs), scores, -jnp.inf)
+
+    m_prev = m_ref[...]                                   # (Hkv,G,1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (
+        acc_ref[...] * alpha
+        + jnp.einsum("hgs,shd->hgd", p, v)
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[...] = (acc_ref[...] / denom).reshape(1, h, d).astype(
+            out_ref.dtype
+        )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(q, pool_k, pool_v, tables, lengths, *,
+                           interpret: bool = True):
+    """q: (B, H, D); pool_k/v: (nb, bs, Hkv, D); tables: (B, M); lengths (B,)."""
+    b, h, d = q.shape
+    nb, bs, hkv, _ = pool_k.shape
+    m_blocks = tables.shape[1]
+    g = h // hkv
+    safe_tables = jnp.maximum(tables, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, m_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, j, t, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda b, j, t, ln: (t[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, j, t, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _paged_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(safe_tables, lengths.astype(jnp.int32), q,
+      pool_k.reshape(nb, bs, hkv, d), pool_v.reshape(nb, bs, hkv, d))

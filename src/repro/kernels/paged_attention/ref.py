@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for paged decode attention (direct block tables)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, pool_k, pool_v, tables, lengths):
+    """q: (B, H, D); pool_k/v: (nb, bs, Hkv, D); tables: (B, M) int32
+    (-1 = absent); lengths: (B,) int32. Returns (B, H, D) in q.dtype.
+
+    GQA: H = Hkv * G. Softmax in f32.
+    """
+    b, h, d = q.shape
+    nb, bs, hkv, _ = pool_k.shape
+    m = tables.shape[1]
+    g = h // hkv
+
+    safe = jnp.maximum(tables, 0)
+    k = pool_k[safe].reshape(b, m * bs, hkv, d)       # (B, S, Hkv, D)
+    v = pool_v[safe].reshape(b, m * bs, hkv, d)
+    pos = jnp.arange(m * bs)[None, :]                 # (1, S)
+    mask = (pos < lengths[:, None]) & jnp.repeat(tables >= 0, bs, axis=1)
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jnp.where(
+        jnp.any(mask[:, None, None, :], -1, keepdims=True),
+        jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True)),
+        0.0,
+    )
+    probs = probs / jnp.maximum(jnp.sum(probs, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

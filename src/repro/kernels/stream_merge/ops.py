@@ -1,0 +1,21 @@
+"""Jitted wrapper for the streaming merge."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream_merge import ref
+from repro.kernels.stream_merge.stream_merge import merge_pallas
+
+
+def merge(alloc, ptrs, bfi=None):
+    if jax.default_backend() == "tpu":
+        n = alloc.shape[1]
+        pad = (-n) % 128
+        if pad:
+            alloc = jnp.pad(alloc, ((0, 0), (0, pad)))
+            ptrs = jnp.pad(ptrs, ((0, 0), (0, pad)))
+        found, ptr, src = merge_pallas(alloc, ptrs, interpret=False)
+        return found[:n], ptr[:n], src[:n]
+    return ref.merge_ref(alloc, ptrs, bfi)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for streaming compaction (select-latest over K layers)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ref(alloc, ptrs, bfi):
+    """Merge K snapshot layers into one (paper's streaming job).
+
+    alloc/ptrs/bfi: (K, N). For each page, take the entry of the highest
+    allocated layer; the merged layer's owner becomes 0 (renumbered base).
+    Returns (alloc (N,), ptr (N,), src_layer (N,) int32 [-1 if absent]).
+    """
+    k = alloc.shape[0]
+    idx = jnp.arange(k, dtype=jnp.int32)[:, None]
+    a = alloc != 0
+    src = jnp.max(jnp.where(a, idx, -1), axis=0)
+    found = src >= 0
+    ptr = jnp.take_along_axis(ptrs, jnp.maximum(src, 0)[None], axis=0)[0]
+    return (
+        found,
+        jnp.where(found, ptr, 0).astype(jnp.uint32),
+        src.astype(jnp.int32),
+    )

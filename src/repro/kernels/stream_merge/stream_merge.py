@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: streaming compaction metadata merge.
+
+Same VMEM tiling as chain_resolve (pages on lanes, layers on sublanes) but
+the reduction direction is bottom-up with last-write-wins, producing the
+merged base layer the provider's streaming job writes (paper §4.1). The
+data movement of streaming is the separate ``cow_gather`` pass over the
+winning pointers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAGE_TILE = 512
+
+
+def _merge_kernel(alloc_ref, ptr_ref, found_ref, out_ptr_ref, src_ref):
+    k = alloc_ref.shape[0]
+    n = alloc_ref.shape[1]
+    src = jnp.full((1, n), -1, jnp.int32)
+    ptr = jnp.zeros((1, n), jnp.uint32)
+
+    def body(i, carry):
+        src, ptr = carry
+        a = alloc_ref[i, :] != 0
+        src = src.at[0].set(jnp.where(a, i, src[0]))     # last write wins
+        ptr = ptr.at[0].set(jnp.where(a, ptr_ref[i, :], ptr[0]))
+        return src, ptr
+
+    src, ptr = jax.lax.fori_loop(0, k, body, (src, ptr))
+    found_ref[...] = (src >= 0).astype(jnp.uint32)
+    out_ptr_ref[...] = ptr
+    src_ref[...] = src
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def merge_pallas(alloc, ptrs, *, interpret: bool = True):
+    """alloc/ptrs: (K, N), N a multiple of 128 → (found, ptr, src)."""
+    k, n = alloc.shape
+    tile = min(PAGE_TILE, n)
+    in_spec = pl.BlockSpec((k, tile), lambda i: (0, i))
+    out_spec = pl.BlockSpec((1, tile), lambda i: (0, i))
+    found, ptr, src = pl.pallas_call(
+        _merge_kernel,
+        grid=(pl.cdiv(n, tile),),
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.uint32),
+            jax.ShapeDtypeStruct((1, n), jnp.uint32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(alloc.astype(jnp.uint32), ptrs.astype(jnp.uint32))
+    return found[0] != 0, ptr[0], src[0]

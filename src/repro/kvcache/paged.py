@@ -1,0 +1,204 @@
+"""Paged KV cache with COW sequence forking — the serving-side integration.
+
+vLLM-style block pool, plus the paper's two designs at the block-table
+level:
+
+* **vanilla fork** (vQemu analogue): a forked sequence starts with an empty
+  block table and a parent pointer; resolving block *b* walks the fork
+  chain until an ancestor that owns it is found — O(fork depth) per block.
+* **scalable fork** (sQEMU analogue): fork copies the parent's *resolved*
+  table forward, with an ``owner`` id per block (the ``backing_file_index``
+  analogue) — O(1) per block, and the attention kernel receives a direct
+  block table (``kernels/paged_attention``).
+
+COW: appending to a block owned by an ancestor first copies it into a
+fresh pool block (cluster copy-on-write). Pool blocks are refcounted so
+shared prefixes are stored once (paper Fig 7: base-image sharing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    block_size: int = 16
+    n_blocks: int = 256
+    max_blocks_per_seq: int = 64
+    dtype: object = jnp.bfloat16
+
+
+@dataclasses.dataclass
+class _Seq:
+    sid: int
+    table: np.ndarray        # (max_blocks,) int32 pool block or -1
+    owner: np.ndarray        # (max_blocks,) int32 owning sid (bfi analogue)
+    parent: Optional[int]
+    length: int
+    refs: set = dataclasses.field(default_factory=set)  # blocks we refcount
+
+
+class PagedKVCache:
+    def __init__(self, cfg: PagedKVConfig, *, scalable: bool = True):
+        self.cfg = cfg
+        self.scalable = scalable
+        shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.pool_k = jnp.zeros(shape, cfg.dtype)
+        self.pool_v = jnp.zeros(shape, cfg.dtype)
+        self._free = list(range(cfg.n_blocks - 1, -1, -1))
+        self._ref = np.zeros(cfg.n_blocks, np.int32)
+        self._seqs: dict[int, _Seq] = {}
+        self._next_sid = 0
+        self.lookup_count = 0  # fork-chain index consultations (Fig 13 analogue)
+
+    # -- sequence lifecycle ---------------------------------------------------
+
+    def new_seq(self) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        mb = self.cfg.max_blocks_per_seq
+        self._seqs[sid] = _Seq(
+            sid, np.full(mb, -1, np.int32), np.full(mb, -1, np.int32), None, 0
+        )
+        return sid
+
+    def fork(self, sid: int) -> int:
+        child = self._next_sid
+        self._next_sid += 1
+        parent = self._seqs[sid]
+        mb = self.cfg.max_blocks_per_seq
+        shared, _, _ = self._resolve(sid)
+        if self.scalable:
+            # sQEMU snapshot copy-forward: the child's table directly indexes
+            # every ancestor-owned block (owner = the bfi analogue).
+            owner = np.where(shared >= 0, parent.owner, -1)
+            owner = np.where((shared >= 0) & (owner < 0), sid, owner)
+            seq = _Seq(child, shared.copy(), owner, None, parent.length)
+        else:
+            seq = _Seq(child, np.full(mb, -1, np.int32),
+                       np.full(mb, -1, np.int32), sid, parent.length)
+        # the child holds a reference on every shared block
+        seq.refs = {int(b) for b in shared[shared >= 0]}
+        for b in seq.refs:
+            self._ref[b] += 1
+        self._seqs[child] = seq
+        return child
+
+    def free_seq(self, sid: int) -> None:
+        for b in self._seqs[sid].refs:
+            self._ref[b] -= 1
+            if self._ref[b] <= 0:
+                self._free.append(int(b))
+                self._ref[b] = 0
+        del self._seqs[sid]
+
+    # -- resolution: vanilla walk vs direct ------------------------------------
+
+    def _resolve(self, sid: int):
+        """Flattened (table, owner, lookups) for a sequence."""
+        seq = self._seqs[sid]
+        if self.scalable or seq.parent is None:
+            lookups = int(np.sum(seq.table >= 0)) or 1
+            self.lookup_count += lookups
+            return seq.table, seq.owner, lookups
+        # vanilla: per block, walk up the fork chain
+        mb = self.cfg.max_blocks_per_seq
+        table = np.full(mb, -1, np.int32)
+        owner = np.full(mb, -1, np.int32)
+        lookups = 0
+        for b in range(mb):
+            node: Optional[int] = sid
+            while node is not None:
+                nseq = self._seqs[node]
+                lookups += 1
+                if nseq.table[b] >= 0:
+                    table[b] = nseq.table[b]
+                    owner[b] = nseq.owner[b] if nseq.owner[b] >= 0 else node
+                    break
+                node = nseq.parent
+        self.lookup_count += lookups
+        return table, owner, lookups
+
+    def block_table(self, sid: int) -> jax.Array:
+        """Direct block table for the attention kernel."""
+        table, _, _ = self._resolve(sid)
+        return jnp.asarray(table, jnp.int32)
+
+    # -- writes ----------------------------------------------------------------
+
+    def _alloc(self, seq: _Seq) -> int:
+        if not self._free:
+            raise RuntimeError("KV pool exhausted")
+        b = self._free.pop()
+        self._ref[b] = 1
+        seq.refs.add(b)
+        return b
+
+    def append(self, sid: int, k: jax.Array, v: jax.Array) -> None:
+        """Append one token's K/V. k, v: (L, n_kv_heads, head_dim)."""
+        seq = self._seqs[sid]
+        bs = self.cfg.block_size
+        blk_idx, off = divmod(seq.length, bs)
+        resolved, owner, _ = self._resolve(sid)
+        cur = int(resolved[blk_idx])
+        owns = seq.table[blk_idx] >= 0 and seq.owner[blk_idx] in (-1, sid)
+        if cur < 0:
+            nb = self._alloc(seq)
+        elif not owns:
+            # COW: the block belongs to an ancestor — copy before write
+            nb = self._alloc(seq)
+            self.pool_k = self.pool_k.at[:, nb].set(self.pool_k[:, cur])
+            self.pool_v = self.pool_v.at[:, nb].set(self.pool_v[:, cur])
+            if cur in seq.refs:
+                seq.refs.discard(cur)
+                self._ref[cur] -= 1
+                if self._ref[cur] <= 0:
+                    self._free.append(cur)
+                    self._ref[cur] = 0
+        else:
+            nb = int(seq.table[blk_idx])
+        seq.table[blk_idx] = nb
+        seq.owner[blk_idx] = sid
+        self.pool_k = self.pool_k.at[:, nb, off].set(k.astype(self.cfg.dtype))
+        self.pool_v = self.pool_v.at[:, nb, off].set(v.astype(self.cfg.dtype))
+        seq.length += 1
+
+    def append_prefill(self, sid: int, k: jax.Array, v: jax.Array) -> None:
+        """Bulk append. k, v: (L, T, n_kv_heads, head_dim)."""
+        for t in range(k.shape[1]):
+            self.append(sid, k[:, t], v[:, t])
+
+    # -- reads (reference path; kernels/paged_attention is the fast path) ------
+
+    def gather(self, sid: int):
+        """Materialize (L, T, H, D) K/V for a sequence (test oracle)."""
+        seq = self._seqs[sid]
+        table, _, _ = self._resolve(sid)
+        bs = self.cfg.block_size
+        n_blk = -(-seq.length // bs) if seq.length else 0
+        ks, vs = [], []
+        for b in range(n_blk):
+            ks.append(self.pool_k[:, table[b]])
+            vs.append(self.pool_v[:, table[b]])
+        if not ks:
+            L, H, D = self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim
+            return (jnp.zeros((L, 0, H, D), self.cfg.dtype),) * 2
+        k = jnp.concatenate(ks, axis=1)[:, :seq.length]
+        v = jnp.concatenate(vs, axis=1)[:, :seq.length]
+        return k, v
+
+    def seq_length(self, sid: int) -> int:
+        return self._seqs[sid].length
+
+    def blocks_in_use(self) -> int:
+        return int(np.sum(self._ref > 0))

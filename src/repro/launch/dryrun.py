@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first backend init (see MULTI-POD DRY-RUN spec).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` with the compiled
+memory analysis, cost analysis (FLOPs / bytes), per-device collective
+bytes (``hlo_analysis``), and derived roofline terms.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cells_for, get_config, list_archs
+from repro.distributed import sharding as sh
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import get_model
+from repro.models.api import batch_specs
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+# Gradient-accumulation plan for the big train cells (keeps per-device
+# activation memory within a v5e's 16 GB HBM; see EXPERIMENTS.md §Dry-run).
+ACCUM = {
+    ("qwen2-72b", "train_4k"): 16,
+    ("chameleon-34b", "train_4k"): 8,
+    ("nemotron-4-15b", "train_4k"): 8,
+    ("qwen2-7b", "train_4k"): 8,
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 8,
+    ("qwen2.5-3b", "train_4k"): 4,
+    ("qwen2-moe-a2.7b", "train_4k"): 4,
+    ("zamba2-2.7b", "train_4k"): 4,
+    ("rwkv6-3b", "train_4k"): 4,
+    ("whisper-base", "train_4k"): 2,
+}
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    return batch_specs(cfg, spec.global_batch, spec.seq_len, kind=spec.kind)
+
+
+def _n_dp(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _tuned_config(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    groups = _n_dp(mesh)
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    while groups > 1 and tokens % groups:
+        groups //= 2
+    return dataclasses.replace(cfg, dispatch_groups=groups)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               compile_only: bool = False, extra: dict | None = None,
+               variant: dict | None = None) -> dict:
+    """``variant``: perf-iteration knobs — ``seq_shard`` (bool, SP),
+    ``cast_bf16`` (bool, pre-gather cast), ``accum`` (int override)."""
+    variant = variant or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sh.make_rules(mesh, seq_shard=bool(variant.get("seq_shard")))
+    cfg = _tuned_config(arch, shape_name, mesh)
+    if extra:
+        cfg = dataclasses.replace(cfg, **extra)
+    model = get_model(cfg)
+    spec = SHAPES[shape_name]
+    n_dev = len(mesh.devices.reshape(-1))
+
+    params_shapes = model.init_shapes()
+    if variant.get("params_bf16"):
+        # serving-standard bf16 weights: halves weight-gather wire bytes
+        # and weight HBM reads (stored dtype, not a foldable cast)
+        params_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 and len(s.shape) >= 2 else s,
+            params_shapes,
+        )
+    p_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        sh.param_specs(params_shapes, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    b_specs = input_specs(arch, shape_name)
+    b_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        sh.batch_spec(b_specs, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    t0 = time.time()
+    with mesh, sh.use_rules(rules):
+        if spec.kind == "train":
+            accum = int(variant.get("accum", ACCUM.get((arch, shape_name), 1)))
+            opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+            o_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                sh.param_specs(opt_shapes, rules),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            step_fn = make_train_step(
+                model, adamw.AdamWConfig(), accum_steps=accum,
+                cast_bf16=bool(variant.get("cast_bf16")),
+                grad_shardings=None if variant.get("no_grad_pin") else p_shard,
+            )
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            ).lower(params_shapes, opt_shapes, b_specs)
+        elif spec.kind == "prefill":
+            lowered = jax.jit(
+                model.prefill, in_shardings=(p_shard, b_shard)
+            ).lower(params_shapes, b_specs)
+        else:  # decode — serve_step: one token against a seq_len KV cache
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(spec.global_batch, spec.seq_len)
+            )
+            c_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                sh.cache_specs(cache_shapes, rules),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+                donate_argnums=(1,),
+            ).lower(params_shapes, cache_shapes, b_specs["tokens"])
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    wc = hlo_analysis.weighted_costs(hlo)
+
+    # trip-count-weighted (cost_analysis counts while bodies once)
+    flops_dev = float(wc["flops"])
+    bytes_dev = float(wc["hbm_bytes"])
+    # ring all-reduce moves ~2x the payload over a link; others ~1x
+    coll_dev = float(coll["total"]) + float(coll["all-reduce"])
+
+    # model FLOPs (the "useful work" yardstick)
+    n_active = cfg.active_param_count()
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    if spec.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+
+    terms = dict(
+        compute_s=flops_dev / HW["peak_flops_bf16"],
+        memory_s=bytes_dev / HW["hbm_bw"],
+        collective_s=coll_dev / HW["ici_bw_per_link"],
+    )
+    bottleneck = max(terms, key=terms.get)
+
+    rec = dict(
+        arch=arch,
+        shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=n_dev,
+        kind=spec.kind,
+        accum=ACCUM.get((arch, shape_name), 1) if spec.kind == "train" else 1,
+        compile_s=round(compile_s, 1),
+        memory=dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            peak_bytes_per_device=(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        ),
+        flops_per_device=flops_dev,
+        hbm_bytes_per_device=bytes_dev,
+        xla_cost_analysis=dict(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        ),
+        collective_bytes_per_device={k: v for k, v in coll.items()},
+        model_flops_total=model_flops,
+        model_flops_per_device=model_flops / n_dev,
+        useful_flops_ratio=(model_flops / n_dev) / flops_dev if flops_dev else 0.0,
+        roofline_terms_s=terms,
+        bottleneck=bottleneck,
+        roofline_frac=(
+            (model_flops / n_dev / HW["peak_flops_bf16"]) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0
+        ),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in cells_for(arch):
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}.json")
+        if os.path.exists(path):
+            print(f"[skip] {arch} {shape} {mesh_tag} (exists)")
+            continue
+        print(f"[lower+compile] {arch} {shape} {mesh_tag} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, multi_pod=mp)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"  ok: compile={rec['compile_s']}s "
+                f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB/dev "
+                f"flops/dev={rec['flops_per_device']:.3g} "
+                f"coll/dev={rec['collective_bytes_per_device']['total']:.3g}B "
+                f"bottleneck={rec['bottleneck']}",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — a cell failure is a bug report
+            failures += 1
+            print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+            with open(path + ".fail", "w") as f:
+                f.write(traceback.format_exc())
+    print(f"done. failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Post-SPMD HLO analysis: collective bytes with while-loop trip counts.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but no collective
+accounting, so we parse ``compiled.as_text()`` (the per-device, post-
+partitioning module): every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` op contributes
+its payload bytes, multiplied by the trip count of every enclosing while
+loop (scan-over-layers puts the per-layer collectives inside a while body
+that appears once in the text but runs n_layers times).
+
+Trip counts are recovered heuristically from the while condition
+computation (the largest integer literal compared against the induction
+variable) — exact for lax.scan/fori_loop lowerings.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of every typed shape literal in ``shape_text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    comps: dict[str, list[str]] = {}
+    name = None
+    depth = 0
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\s*\([^)]*\))?.*\{")
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if name is None:
+            m = header.match(stripped)
+            if m and stripped.endswith("{"):
+                name = m.group(1)
+                comps[name] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            name = None
+            continue
+        comps[name].append(stripped)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: dict[str, str]) -> dict[str, int]:
+    """Execution multiplier per computation (product of enclosing trips)."""
+    while_re = re.compile(
+        r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+    )
+    call_re = re.compile(
+        r"(?:fusion|call|custom-call|conditional)\(.*?\).*?"
+        r"(?:calls|to_apply)=%?([\w.\-]+)"
+    )
+    mult: dict[str, int] = defaultdict(lambda: 0)
+    entry = None
+    for cname in comps:
+        if "main" in cname or entry is None:
+            entry = entry or cname
+        if "main" in cname:
+            entry = cname
+    mult[entry] = 1
+    # simple fixed-point propagation over the call graph
+    for _ in range(64):
+        changed = False
+        for cname, text in comps.items():
+            m = mult[cname]
+            if m == 0:
+                continue
+            for wm in while_re.finditer(text):
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, ""))
+                for target in (body, cond):
+                    newm = m * max(trips, 1)
+                    if newm > mult[target]:
+                        mult[target] = newm
+                        changed = True
+            for cm in call_re.finditer(text):
+                target = cm.group(1)
+                if target in comps and m > mult[target]:
+                    mult[target] = m
+                    changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+_SKIP_BYTES_OPS = (
+    "parameter", "constant", "get-tuple-element", "tuple(", "bitcast",
+    "after-all", "custom-call(",
+)
+
+
+_LINE_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(shape_text: str):
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return None, []
+    dims = [int(x) for x in m.group(2).split(",") if x] if m.group(2) else []
+    return m.group(1), dims
+
+
+def weighted_costs(hlo: str) -> dict[str, float]:
+    """Trip-count-weighted per-device FLOPs and HBM bytes.
+
+    XLA's ``cost_analysis()`` counts each HLO op once, so a scanned layer
+    stack (while loop) is undercounted by its trip count. We re-derive:
+
+    * ``flops``: 2·prod(result)·K for every ``dot`` (K = product of the
+      lhs contracting dims, resolved through a per-computation symbol
+      table since optimized HLO operands are bare names), × the multiplier
+      of the enclosing loops;
+    * ``hbm_bytes``: result+operand bytes of every top-level op in
+      non-fusion computations (fusion internals don't touch HBM), × the
+      multiplier. Matches cost_analysis' per-op convention, loop-weighted.
+    """
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    fusion_bodies: set[str] = set()
+    fusion_re = re.compile(
+        r"(?:fusion|custom-call)\(.*?\).*?(?:calls|to_apply)=%?([\w.\-]+)"
+    )
+    for text in comps.values():
+        for fm in fusion_re.finditer(text):
+            fusion_bodies.add(fm.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    for cname, text in comps.items():
+        m = mult.get(cname, 1) or 1
+        in_fusion = cname in fusion_bodies
+        # symbol table: instruction name -> result shape text
+        shapes: dict[str, str] = {}
+        parsed = []
+        for line in text.splitlines():
+            lm = _LINE_RE.match(line)
+            if not lm:
+                continue
+            shapes[lm.group(1)] = lm.group(2)
+            parsed.append((lm.group(1), lm.group(2), lm.group(3), line))
+        for name, rshape, opname, line in parsed:
+            if opname == "dot":
+                _, rdims = _shape_dims(rshape)
+                after = line.split(" dot(", 1)[1]
+                ops = _OPERAND_RE.findall(after.split(")", 1)[0])
+                cdims = _CONTRACT_RE.search(line)
+                k = 1.0
+                if ops and cdims is not None:
+                    _, lhs_dims = _shape_dims(shapes.get(ops[0], ""))
+                    for ci in (cdims.group(1).split(",") if cdims.group(1)
+                               else []):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                n_elems = 1.0
+                for d in rdims:
+                    n_elems *= d
+                flops += 2.0 * n_elems * k * m
+            if in_fusion:
+                continue
+            if opname in ("parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast", "after-all", "iota"):
+                continue
+            after = line.split("(", 1)[1] if "(" in line else ""
+            operands = _OPERAND_RE.findall(after.split(")", 1)[0])
+            if opname == "dynamic-update-slice":
+                # XLA performs DUS in place (buffer aliasing): the traffic
+                # is the update slice, not the whole buffer. Counting the
+                # full KV cache per scan trip would overstate decode
+                # memory by ~2 orders of magnitude.
+                upd = _shape_bytes(shapes.get(operands[1], "")) if len(
+                    operands) > 1 else 0
+                hbm += 2 * upd * m
+                continue
+            if opname == "dynamic-slice":
+                # reads only the slice, not the sliced-from buffer
+                hbm += 2 * _shape_bytes(rshape) * m
+                continue
+            rbytes = _shape_bytes(rshape)
+            obytes = [_shape_bytes(shapes.get(op, "")) for op in operands]
+            if opname == "fusion":
+                # XLA loop fusions around (dynamic-)slice/update ops alias
+                # their big operand: an update fusion writes only the
+                # update (count the small operands twice); a slice-read
+                # fusion reads only O(result). Without this, a scanned KV
+                # cache counts its full buffer once per layer.
+                if ("update_slice" in line or "scatter" in line) and any(
+                        o == rbytes for o in obytes):
+                    hbm += 2 * sum(o for o in obytes if o != rbytes) * m
+                    continue
+                if "dynamic_slice" in line or "gather" in line:
+                    hbm += (rbytes + sum(o for o in obytes
+                                         if o <= 16 * rbytes)) * m
+                    continue
+            nbytes = rbytes + sum(obytes)
+            hbm += nbytes * m
+    return dict(flops=flops, hbm_bytes=hbm)
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Per-device payload bytes by collective kind (trip-count weighted)."""
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+(" + "|".join(_COLLECTIVES) +
+        r")(?:-start|-done)?\("
+    )
+    for cname, text in comps.items():
+        m = mult.get(cname, 1) or 1
+        for line in text.splitlines():
+            om = op_re.search(line)
+            if not om:
+                continue
+            result_text, kind = om.group(1), om.group(2)
+            if "-done(" in line:
+                continue  # avoid double-counting async start/done pairs
+            nbytes = _shape_bytes(result_text)
+            if kind == "reduce-scatter":
+                # payload is the (larger) operand
+                operand = line[om.end():]
+                nbytes = max(nbytes, _shape_bytes(operand))
+            out[kind] += float(nbytes) * m
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,3 @@
+"""Model zoo: dense/MoE transformers, enc-dec, RWKV6, Mamba2 hybrid."""
+
+from repro.models.api import LM, batch_specs, get_model, make_batch  # noqa: F401

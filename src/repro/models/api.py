@@ -1,0 +1,99 @@
+"""Uniform LM interface over all architecture families.
+
+Every family exposes the same five entry points, so train/serve/dryrun
+code is architecture-agnostic:
+
+* ``init(key) -> params``
+* ``loss(params, batch) -> scalar``          (batch: tokens/labels[/frames])
+* ``init_cache(batch, max_seq) -> cache``
+* ``prefill(params, batch) -> (logits, cache)``
+* ``decode_step(params, cache, tokens) -> (logits, cache)``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, rwkv6, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return _mod(self.cfg).init_params(self.cfg, key)
+
+    def init_shapes(self, key=None):
+        """ShapeDtypeStruct pytree of params (no allocation)."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(lambda k: self.init(k), key)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.loss_fn(cfg, params, batch["tokens"],
+                                  batch["labels"], batch["frames"])
+        return _mod(cfg).loss_fn(cfg, params, batch["tokens"], batch["labels"])
+
+    def init_cache(self, batch: int, max_seq: int):
+        return _mod(self.cfg).init_cache(self.cfg, batch, max_seq)
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.prefill(cfg, params, batch["tokens"], batch["frames"])
+        return _mod(cfg).prefill(cfg, params, batch["tokens"])
+
+    def decode_step(self, params, cache, tokens):
+        return _mod(self.cfg).decode_step(self.cfg, params, cache, tokens)
+
+
+def _mod(cfg: ModelConfig):
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "encdec": encdec,
+        "ssm": rwkv6,
+        "hybrid": hybrid,
+    }[cfg.family]
+
+
+def get_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict[str, Any]:
+    """A concrete random batch (smoke tests, examples)."""
+    kt, kf = jax.random.split(key)
+    out = dict(
+        tokens=jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size,
+                                  dtype=jnp.int32),
+    )
+    out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            kf, (batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, *, kind: str):
+    """ShapeDtypeStructs for every model input of a given shape cell."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if kind == "train":
+        specs = dict(tokens=tok, labels=tok)
+    elif kind == "prefill":
+        specs = dict(tokens=tok)
+    elif kind == "decode":
+        specs = dict(tokens=jax.ShapeDtypeStruct((batch, 1), jnp.int32))
+    else:
+        raise ValueError(kind)
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+    return specs

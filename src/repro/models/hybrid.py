@@ -1,0 +1,201 @@
+"""zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+``cfg.n_layers`` Mamba2 blocks, with a single shared (attention + MLP)
+block — one parameter set, reused — applied after every ``cfg.attn_every``
+Mamba2 layers (zamba2's parameter-saving trick; we omit the per-invocation
+LoRA deltas and the [x, x0] concat re-projection, noted in DESIGN.md).
+
+Decode cache: per-layer Mamba2 conv+SSM states, plus one KV cache *per
+shared-block application site* (G sites → leading G axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, key):
+    k_embed, k_out, k_shared, k_layers = jax.random.split(key, 4)
+    ka, kf = jax.random.split(k_shared)
+    shared = dict(
+        ln1=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+        ln2=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+        attn=L.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         qkv_bias=False, qk_norm=False,
+                         n_layers_scale=max(1, _n_groups(cfg))),
+        ff=L.mlp_init(kf, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                      n_layers_scale=max(1, _n_groups(cfg))),
+    )
+    return dict(
+        embed=L.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        ln_f=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+        w_out=L.dense_init(k_out, cfg.d_model, cfg.vocab_size, scale=0.02),
+        shared=shared,
+        layers=jax.vmap(lambda k: M.block_init(cfg, k))(
+            jax.random.split(k_layers, cfg.n_layers)
+        ),
+    )
+
+
+def _shared_fwd(cfg: ModelConfig, p, x, positions):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         positions, rope_theta=cfg.rope_theta)
+    attn = L.attention_ref(q, k, v, causal=True)
+    attn = attn.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.hd)
+    x = x + attn @ p["attn"]["wo"].astype(x.dtype)
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["ff"], h2, cfg.activation)
+    k = lshard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = lshard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return lshard(x, "batch", "seq", "embed"), (k, v)
+
+
+def _shared_decode(cfg: ModelConfig, p, x, k_cache, v_cache, pos):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         positions, rope_theta=cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+    k_cache = lshard(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_cache = lshard(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    attn = L.decode_attention_ref(q, k_cache, v_cache, pos + 1)
+    attn = attn.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
+    x = x + attn @ p["attn"]["wo"].astype(x.dtype)
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["ff"], h2, cfg.activation)
+    return x, k_cache, v_cache
+
+
+def _mamba_group(cfg: ModelConfig, group_params, x, conv_prev, ssm_state):
+    """Scan `attn_every` Mamba2 blocks. States have leading group-layer dim."""
+
+    def body(x, inputs):
+        p, cp, st = inputs
+        x, cp, st = M.block_apply(cfg, p, x, cp, st)
+        return x, (cp, st)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (cp, st) = jax.lax.scan(body, x, (group_params, conv_prev, ssm_state))
+    return x, cp, st
+
+
+def _slice_group(tree, g, size):
+    return jax.tree.map(lambda a: a[g * size:(g + 1) * size], tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    conv_shape, ssm_shape = M.state_shapes(cfg, batch)
+    g = _n_groups(cfg)
+    return dict(
+        conv=jnp.zeros((cfg.n_layers,) + conv_shape, L.COMPUTE_DTYPE),
+        ssm=jnp.zeros((cfg.n_layers,) + ssm_shape, jnp.float32),
+        k=jnp.zeros((g, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                    L.COMPUTE_DTYPE),
+        v=jnp.zeros((g, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                    L.COMPUTE_DTYPE),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _forward(cfg: ModelConfig, params, tokens, cache, *, collect_kv: bool):
+    b, s = tokens.shape
+    ae = cfg.attn_every
+    g = _n_groups(cfg)
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    x = lshard(x, "batch", "seq", "embed")
+    positions = jnp.arange(s, dtype=jnp.int32)[None] + cache["pos"]
+    convs, ssms, kvs = [], [], []
+    for gi in range(g):
+        gp = _slice_group(params["layers"], gi, ae)
+        cp = cache["conv"][gi * ae:(gi + 1) * ae]
+        st = cache["ssm"][gi * ae:(gi + 1) * ae]
+        x, cp, st = _mamba_group(cfg, gp, x, cp, st)
+        convs.append(cp)
+        ssms.append(st)
+        x, kv = _shared_fwd(cfg, params["shared"], x, positions)
+        kvs.append(kv)
+    # trailing mamba layers (n_layers % attn_every)
+    rem = cfg.n_layers - g * ae
+    if rem:
+        gp = _slice_group(params["layers"], g, ae)  # partial slice
+        gp = jax.tree.map(lambda a: a[-rem:] if a.shape[0] != rem else a, gp)
+        cp = cache["conv"][g * ae:]
+        st = cache["ssm"][g * ae:]
+        x, cp, st = _mamba_group(cfg, gp, x, cp, st)
+        convs.append(cp)
+        ssms.append(st)
+    new_cache = dict(
+        conv=jnp.concatenate(convs, axis=0),
+        ssm=jnp.concatenate(ssms, axis=0),
+        k=jnp.stack([kv[0] for kv in kvs]) if collect_kv else cache["k"],
+        v=jnp.stack([kv[1] for kv in kvs]) if collect_kv else cache["v"],
+        pos=cache["pos"] + s,
+    )
+    return x, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels):
+    cache = init_cache(cfg, tokens.shape[0], 0)
+    x, _ = _forward(cfg, params, tokens, cache, collect_kv=False)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return L.lm_loss(x, params["w_out"].astype(x.dtype), labels)
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    cache = init_cache(cfg, tokens.shape[0], 0)
+    x, cache = _forward(cfg, params, tokens, cache, collect_kv=True)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["w_out"].astype(x.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    b = tokens.shape[0]
+    ae = cfg.attn_every
+    g = _n_groups(cfg)
+    pos = cache["pos"]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    convs, ssms, ks, vs = [], [], [], []
+    for gi in range(g):
+        gp = _slice_group(params["layers"], gi, ae)
+        cp = cache["conv"][gi * ae:(gi + 1) * ae]
+        st = cache["ssm"][gi * ae:(gi + 1) * ae]
+        x, cp, st = _mamba_group(cfg, gp, x, cp, st)
+        convs.append(cp)
+        ssms.append(st)
+        x, kc, vc = _shared_decode(cfg, params["shared"], x,
+                                   cache["k"][gi], cache["v"][gi], pos)
+        ks.append(kc)
+        vs.append(vc)
+    rem = cfg.n_layers - g * ae
+    if rem:
+        gp = _slice_group(params["layers"], g, ae)
+        gp = jax.tree.map(lambda a: a[-rem:] if a.shape[0] != rem else a, gp)
+        cp = cache["conv"][g * ae:]
+        st = cache["ssm"][g * ae:]
+        x, cp, st = _mamba_group(cfg, gp, x, cp, st)
+        convs.append(cp)
+        ssms.append(st)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["w_out"].astype(x.dtype)).astype(jnp.float32)
+    new_cache = dict(
+        conv=jnp.concatenate(convs, axis=0),
+        ssm=jnp.concatenate(ssms, axis=0),
+        k=jnp.stack(ks),
+        v=jnp.stack(vs),
+        pos=pos + 1,
+    )
+    return logits, new_cache

@@ -1,0 +1,285 @@
+"""Shared neural-net layers: norms, RoPE, attention, MLPs, embeddings.
+
+Everything is a pure function over explicit parameter pytrees (dicts of
+arrays). Layer stacks are *stacked* along a leading axis and driven with
+``jax.lax.scan`` + ``jax.checkpoint`` so that 80-layer models lower to a
+single rolled loop (small HLO, fast compiles, remat-friendly).
+
+Compute dtype is bf16 (TPU MXU native); parameters and softmax/loss
+accumulation are f32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, *, scale=None, dtype=PARAM_DTYPE):
+    scale = (1.0 / jnp.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d_model, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int):
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((n_pos, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# attention (pure-JAX flash-style reference; Pallas kernels override on TPU)
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q, k):
+    """Grouped-query scores without materializing repeated KV.
+
+    q: (B, Sq, H, D), k: (B, Sk, Hkv, D) with H = Hkv * G.
+    Returns (B, Hkv, G, Sq, Sk) f32.
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+
+
+def _grouped_out(probs, v):
+    """probs: (B, Hkv, G, Sq, Sk) ; v: (B, Sk, Hkv, D) → (B, Sq, H, D)."""
+    b, hkv, g, sq, sk = probs.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hkv * g, v.shape[-1])
+
+
+def attention_ref(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                  q_chunk: int = 1024):
+    """Chunked exact attention (softmax per q-chunk over full K rows).
+
+    Memory is O(q_chunk * Sk) per chunk instead of O(Sq * Sk) — this is
+    what lets 32k-token prefill lower within HBM. ``kv_len`` masks the
+    valid prefix of the KV buffers (decode with a partially filled cache).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kpos = jnp.arange(sk)
+
+    def one_chunk(q_blk, q_start):
+        scores = _grouped_scores(q_blk, k) * scale           # (B,Hkv,G,qc,Sk)
+        mask = jnp.ones((q_blk.shape[1], sk), bool)
+        if causal:
+            qpos = q_start + jnp.arange(q_blk.shape[1]) + q_offset
+            mask &= kpos[None, :] <= qpos[:, None]
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(jnp.any(mask, -1, keepdims=True), probs, 0.0)
+        return _grouped_out(probs, v)
+
+    if sq <= q_chunk:
+        return one_chunk(q, 0)
+
+    n_chunks = (sq + q_chunk - 1) // q_chunk
+    pad = n_chunks * q_chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = qp.reshape(b, n_chunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inputs):
+        q_blk, i = inputs
+        return None, one_chunk(q_blk, i * q_chunk)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * q_chunk, h, d)
+    return out[:, :sq]
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """Single-position attention against a (possibly oversized) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D); kv_len: scalar or (B,).
+    """
+    return attention_ref(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# attention block parameters
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model, n_heads, n_kv_heads, head_dim, *, qkv_bias, qk_norm,
+              n_layers_scale=1):
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], d_model, n_heads * head_dim),
+        wk=dense_init(ks[1], d_model, n_kv_heads * head_dim),
+        wv=dense_init(ks[2], d_model, n_kv_heads * head_dim),
+        wo=dense_init(ks[3], n_heads * head_dim, d_model,
+                      scale=1.0 / jnp.sqrt(2.0 * n_layers_scale * d_model)),
+    )
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), PARAM_DTYPE)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), PARAM_DTYPE)
+        p["k_norm"] = jnp.ones((head_dim,), PARAM_DTYPE)
+    return p
+
+
+def attn_qkv(p, x, n_heads, n_kv_heads, head_dim, positions, *, rope_theta,
+             use_rope=True):
+    """Project to rope'd q/k and v. x: (B, S, d) → (B,S,H,D),(B,S,Hkv,D)x2."""
+    b, s, _ = x.shape
+    cd = x.dtype
+    q = x @ p["wq"].astype(cd)
+    k = x @ p["wk"].astype(cd)
+    v = x @ p["wv"].astype(cd)
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, *, gated: bool, n_layers_scale=1):
+    ks = jax.random.split(key, 3)
+    p = dict(
+        w_up=dense_init(ks[0], d_model, d_ff),
+        w_down=dense_init(ks[1], d_ff, d_model,
+                          scale=1.0 / jnp.sqrt(2.0 * n_layers_scale * d_ff)),
+    )
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_apply(p, x, activation: str):
+    cd = x.dtype
+    act = activation_fn(activation)
+    up = x @ p["w_up"].astype(cd)
+    if "w_gate" in p:
+        up = act(x @ p["w_gate"].astype(cd)) * up
+    else:
+        up = act(up)
+    return up @ p["w_down"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# LM loss (chunked over sequence so (B,S,V) never fully materializes)
+# ---------------------------------------------------------------------------
+
+def lm_loss(hidden, w_out, labels, *, s_chunk: int = 512, mask=None):
+    """Cross-entropy of hidden @ w_out against labels, chunked over S.
+
+    hidden: (B, S, d) compute-dtype; w_out: (d, V); labels: (B, S) int32.
+    Returns mean nll over unmasked positions (f32 scalar).
+    """
+    b, s, d = hidden.shape
+    v = w_out.shape[1]
+    if mask is None:
+        mask = jnp.ones((b, s), bool)
+    n_chunks = max(1, (s + s_chunk - 1) // s_chunk)
+    pad = n_chunks * s_chunk - s
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    hp = hp.reshape(b, n_chunks, s_chunk, d).transpose(1, 0, 2, 3)
+    lp = lp.reshape(b, n_chunks, s_chunk).transpose(1, 0, 2)
+    mp = mp.reshape(b, n_chunks, s_chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        h, lab, m = inp
+        logits = (h @ w_out.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = jnp.where(m, lse - gold, 0.0)
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m)), None
+
+    (total, count), _ = jax.lax.scan(body, (0.0, 0.0), (hp, lp, mp))
+    return total / jnp.maximum(count, 1.0)

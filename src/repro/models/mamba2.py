@@ -1,0 +1,100 @@
+"""Mamba2 (SSD) block: selective state-space recurrence.
+
+Projections and the causal depthwise conv run over the full sequence
+(MXU-friendly); the diagonal-decay rank-1 state update runs in a chunked
+time scan. State per layer: h (B, nH, headD, N) f32 + conv context
+(B, K-1, conv_channels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def block_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    din = d_inner(cfg)
+    nh = n_ssm_heads(cfg)
+    conv_ch = din + 2 * cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    return dict(
+        ln=jnp.ones((d,), L.PARAM_DTYPE),
+        in_proj=L.dense_init(ks[0], d, 2 * din + 2 * cfg.ssm_state + nh),
+        conv_w=(jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(
+            L.PARAM_DTYPE),
+        conv_b=jnp.zeros((conv_ch,), L.PARAM_DTYPE),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(L.PARAM_DTYPE),
+        d_skip=jnp.ones((nh,), L.PARAM_DTYPE),
+        dt_bias=jnp.zeros((nh,), L.PARAM_DTYPE),
+        norm=jnp.ones((din,), L.PARAM_DTYPE),
+        out_proj=L.dense_init(ks[2], din, d,
+                              scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers * din)),
+    )
+
+
+def block_apply(cfg: ModelConfig, p, x, conv_prev, ssm_state):
+    """x: (B, S, d). Returns (out, new_conv_prev, new_ssm_state)."""
+    b, s, d = x.shape
+    cd = x.dtype
+    din = d_inner(cfg)
+    nh = n_ssm_heads(cfg)
+    hd = cfg.ssm_head_dim
+    st = cfg.ssm_state
+
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(cd)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * st], axis=-1)
+    xbc, conv_prev = R.causal_depthwise_conv(
+        xbc, p["conv_w"], p["conv_b"], prev=conv_prev
+    )
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [din, din + st], axis=-1)
+    xs = xs.reshape(b, s, nh, hd).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)                    # (B,S,N)
+    cmat = cmat.astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    decay = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None, None] * dt)
+
+    def step(hstate, inp):
+        x_t, b_t, c_t, dt_t, a_t = inp
+        # hstate: (B, nh, hd, N)
+        dbx = jnp.einsum("bh,bhd,bn->bhdn", dt_t, x_t, b_t)
+        hstate = a_t[..., None, None] * hstate + dbx
+        y = jnp.einsum("bhdn,bn->bhd", hstate, c_t)
+        return hstate, y
+
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    b_t = jnp.moveaxis(bmat, 1, 0)
+    c_t = jnp.moveaxis(cmat, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    a_t = jnp.moveaxis(decay, 1, 0)
+    ssm_state, ys = R.chunked_time_scan(
+        step, ssm_state, (xs_t, b_t, c_t, dt_t, a_t),
+        chunk=cfg.scan_chunk, remat=cfg.remat,
+    )
+    y = jnp.moveaxis(ys, 0, 1)                          # (B,S,nh,hd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs
+    y = y.reshape(b, s, din).astype(cd)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(cd), conv_prev, ssm_state
+
+
+def state_shapes(cfg: ModelConfig, batch: int):
+    conv_ch = d_inner(cfg) + 2 * cfg.ssm_state
+    return (
+        (batch, cfg.ssm_conv - 1, conv_ch),
+        (batch, n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state),
+    )

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts feed-forward: shared + routed top-k experts.
+
+Dispatch is sort-based with per-group capacity (no (T, E, C) one-hot —
+that would never fit at 1M tokens): token→expert assignments are argsorted,
+ranked within their expert segment and scattered into a dense
+``(groups, E, capacity, d)`` buffer whose group axis shards over the data
+axis (local dispatch per DP shard) and whose expert axis shards over the
+model axis (EP). Overflowing assignments are dropped (standard
+capacity-factor semantics); a load-balance aux loss keeps the router
+honest.
+
+``dispatch_groups`` must divide the token count; the launcher sets it to
+the DP shard count so dispatch is shard-local (no cross-batch traffic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+
+
+def moe_init(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = dict(
+        router=L.dense_init(ks[0], d, e, scale=0.02),
+        e_gate=jax.vmap(lambda k: L.dense_init(k, d, f))(jax.random.split(ks[1], e)),
+        e_up=jax.vmap(lambda k: L.dense_init(k, d, f))(jax.random.split(ks[2], e)),
+        e_down=jax.vmap(
+            lambda k: L.dense_init(k, f, d, scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers * f))
+        )(jax.random.split(ks[3], e)),
+    )
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.moe_d_ff
+        p["shared"] = L.mlp_init(ks[4], d, fs, gated=True,
+                                 n_layers_scale=cfg.n_layers)
+        p["shared_gate"] = L.dense_init(ks[5], d, 1, scale=0.02)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    cap = int(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, d) → (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.dispatch_groups
+    t = b * s
+    assert t % g == 0, f"dispatch_groups {g} must divide token count {t}"
+    tg = t // g
+    cap = _capacity(tg, cfg)
+
+    xt = x.reshape(g, tg, d)
+    xt = lshard(xt, "dispatch", None, "embed")
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (g,tg,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                            # (g,tg,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): e * sum(frac_tokens * frac_prob)
+    pe = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = e * jnp.sum(pe * fe)
+
+    def dispatch_one(xg, ig):
+        """xg: (tg, d); ig: (tg, k) → buf (e, cap, d), slot (tg*k,), ok."""
+        flat_e = ig.reshape(-1)                                       # (tg*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank = jnp.arange(tg * k) - first
+        ok = rank < cap
+        slot_sorted = jnp.where(ok, sorted_e * cap + rank, e * cap)   # drop
+        tok_sorted = order // k
+        buf = jnp.zeros((e * cap, d), xg.dtype).at[slot_sorted].set(
+            xg[tok_sorted], mode="drop"
+        )
+        # map back to unsorted assignment order
+        slot = jnp.zeros((tg * k,), jnp.int32).at[order].set(
+            slot_sorted.astype(jnp.int32)
+        )
+        return buf.reshape(e, cap, d), slot
+
+    buf, slot = jax.vmap(dispatch_one)(xt, top_i)                     # (g,e,cap,d)
+    buf = lshard(buf, "dispatch", "expert", None, "embed")
+
+    cd = x.dtype
+    h = jnp.einsum("gecd,edf->gecf", buf, p["e_up"].astype(cd))
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["e_gate"].astype(cd))
+    h = jax.nn.silu(gate) * h
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["e_down"].astype(cd))
+    out_buf = lshard(out_buf, "dispatch", "expert", None, "embed")
+
+    def combine_one(ob, sl, w):
+        flat = ob.reshape(e * cap, d)
+        picked = jnp.where(
+            (sl < e * cap)[:, None], flat[jnp.minimum(sl, e * cap - 1)], 0.0
+        )                                                            # (tg*k, d)
+        return jnp.sum(
+            picked.reshape(tg, k, d) * w[..., None].astype(ob.dtype), axis=1
+        )
+
+    out = jax.vmap(combine_one)(out_buf, slot, top_p)                # (g,tg,d)
+    out = out.reshape(b, s, d)
+
+    if "shared" in p:
+        sh = L.mlp_apply(p["shared"], x, "silu")
+        sgate = jax.nn.sigmoid(
+            (x @ p["shared_gate"].astype(cd)).astype(jnp.float32)
+        ).astype(cd)
+        out = out + sh * sgate
+    return out, aux

@@ -1,0 +1,74 @@
+"""Chunked, remat-friendly time scans for recurrent families (RWKV6, Mamba2).
+
+The TPU-native formulation: all projections (big MXU matmuls) are computed
+for the whole sequence *outside* the recurrence; the scan body carries only
+the small recurrent state. The time axis is processed in chunks — the outer
+scan saves one carry per chunk (remat boundary), the inner scan runs the
+per-step recurrence — so backward memory is O(S / chunk * state) instead of
+O(S * state).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_time_scan(step_fn, carry, xs, *, chunk: int = 64, remat: bool = True):
+    """scan ``step_fn`` over the time axis (axis 0 of each leaf of ``xs``).
+
+    step_fn: (carry, x_t) -> (carry, y_t). Returns (carry, ys) with ys
+    stacked over time, like ``lax.scan``.
+    """
+    length = jax.tree.leaves(xs)[0].shape[0]
+    if length <= chunk:
+        return jax.lax.scan(step_fn, carry, xs)
+
+    n_chunks = -(-length // chunk)
+    pad = n_chunks * chunk - length
+
+    def pad_leaf(leaf):
+        cfgpad = [(0, pad)] + [(0, 0)] * (leaf.ndim - 1)
+        leaf = jnp.pad(leaf, cfgpad)
+        return leaf.reshape((n_chunks, chunk) + leaf.shape[1:])
+
+    xs_c = jax.tree.map(pad_leaf, xs)
+
+    def chunk_body(carry, x_chunk):
+        return jax.lax.scan(step_fn, carry, x_chunk)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+
+    def unpad_leaf(leaf):
+        leaf = leaf.reshape((n_chunks * chunk,) + leaf.shape[2:])
+        return leaf[:length]
+
+    return carry, jax.tree.map(unpad_leaf, ys_c)
+
+
+def causal_depthwise_conv(x, w, b, *, prev=None):
+    """Causal depthwise 1-D conv over time. x: (B, S, C); w: (K, C).
+
+    ``prev``: (B, K-1, C) carried context for streaming decode (None →
+    zero history). Returns (out (B, S, C), new_prev).
+    """
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)            # (B, S+K-1, C)
+    out = jnp.zeros_like(x)
+    for i in range(k):                                  # K is tiny (4)
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    new_prev = xp[:, -(k - 1):] if k > 1 else prev
+    return out, new_prev
+
+
+def token_shift(x, prev):
+    """RWKV token shift: x_{t-1} along time. x: (B, S, d); prev: (B, d)."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]

@@ -1,0 +1,261 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent decay.
+
+Per layer: a time-mixing block (multi-head matrix-valued recurrent state,
+decay ``w_t`` produced by a LoRA on the token-shifted input) and a
+channel-mixing block (squared-ReLU FFN with receptance gate). All
+projections run over the full sequence on the MXU; only the rank-1 state
+update ``S ← diag(w_t) S + k_t v_tᵀ`` lives in the scan (see
+``recurrent.chunked_time_scan``).
+
+State per layer: S (B, H, D, D) f32, plus two token-shift carries (B, d).
+Serving integrates with the snapshot store via *state snapshot chains*
+(DESIGN §4): the (tiny, fixed-size) state is the unit of COW forking, not
+KV pages.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+LORA_RANK = 64
+
+
+def _layer_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    return dict(
+        ln1_g=jnp.ones((d,), L.PARAM_DTYPE),
+        ln1_b=jnp.zeros((d,), L.PARAM_DTYPE),
+        ln2_g=jnp.ones((d,), L.PARAM_DTYPE),
+        ln2_b=jnp.zeros((d,), L.PARAM_DTYPE),
+        # time-mix
+        mu=0.5 * jnp.ones((5, d), L.PARAM_DTYPE),  # r,k,v,w,g shift blends
+        w_r=L.dense_init(ks[0], d, d),
+        w_k=L.dense_init(ks[1], d, d),
+        w_v=L.dense_init(ks[2], d, d),
+        w_g=L.dense_init(ks[3], d, d),
+        wo=L.dense_init(ks[4], d, d, scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers * d)),
+        w0=jnp.full((d,), -5.0, L.PARAM_DTYPE),  # decay bias (slow decay)
+        w_lora_a=L.dense_init(ks[5], d, LORA_RANK, scale=0.01),
+        w_lora_b=L.dense_init(ks[6], LORA_RANK, d, scale=0.01),
+        u=(jax.random.normal(ks[7], (d,)) * 0.1).astype(L.PARAM_DTYPE),
+        lnx_g=jnp.ones((d,), L.PARAM_DTYPE),
+        lnx_b=jnp.zeros((d,), L.PARAM_DTYPE),
+        # channel-mix
+        mu_ff=0.5 * jnp.ones((2, d), L.PARAM_DTYPE),  # k, r blends
+        wk_ff=L.dense_init(ks[8], d, cfg.d_ff),
+        wv_ff=L.dense_init(ks[9], cfg.d_ff, d,
+                           scale=1.0 / jnp.sqrt(2.0 * cfg.n_layers * cfg.d_ff)),
+        wr_ff=L.dense_init(ks[10], d, d),
+    )
+
+
+def init_params(cfg: ModelConfig, key):
+    k_embed, k_out, k_layers = jax.random.split(key, 3)
+    return dict(
+        embed=L.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        ln_f_g=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+        ln_f_b=jnp.zeros((cfg.d_model,), L.PARAM_DTYPE),
+        w_out=L.dense_init(k_out, cfg.d_model, cfg.vocab_size, scale=0.02),
+        layers=jax.vmap(lambda k: _layer_init(cfg, k))(
+            jax.random.split(k_layers, cfg.n_layers)
+        ),
+    )
+
+
+def _heads(cfg: ModelConfig, x):
+    b, s, d = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.ssm_head_dim)
+
+
+def _time_mix(cfg: ModelConfig, p, x, shift_prev, state):
+    """x: (B,S,d). Returns (out, new_shift, new_state, per-step None)."""
+    b, s, d = x.shape
+    cd = x.dtype
+    shifted, new_shift = R.token_shift(x, shift_prev)
+
+    def blend(i):
+        m = p["mu"][i].astype(cd)
+        return x * m + shifted * (1.0 - m)
+
+    xr, xk, xv, xw, xg = (blend(i) for i in range(5))
+    r = _heads(cfg, xr @ p["w_r"].astype(cd))
+    k = _heads(cfg, xk @ p["w_k"].astype(cd))
+    v = _heads(cfg, xv @ p["w_v"].astype(cd))
+    g = xg @ p["w_g"].astype(cd)
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(cd)) @ p["w_lora_b"].astype(cd)
+    logw = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                     # (B,S,d) data-dep decay
+    w = _heads(cfg, w)
+    u = _heads(cfg, p["u"].astype(jnp.float32)[None, None, :])[0, 0]  # (H,D)
+
+    if cfg.rwkv_chunked and s > 1:
+        state, y4 = _chunked_recurrence(cfg, r, k, v, w, u, state)
+        y = y4.reshape(b, s, d)
+    else:
+        # per-token recurrence: S (B,H,D,E)
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp                 # (B,H,D) each
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            y = jnp.einsum("bhd,bhde->bhe", r_t,
+                           S + u[None, :, :, None] * kv)
+            S = w_t[..., :, None] * S + kv
+            return S, y
+
+        xs = tuple(
+            jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w)
+        )
+        state, ys = R.chunked_time_scan(step, state, xs,
+                                        chunk=cfg.scan_chunk,
+                                        remat=cfg.remat)
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)  # (B,S,d) f32
+    y = L.layernorm(y.astype(cd), p["lnx_g"], p["lnx_b"])
+    out = (y * jax.nn.silu(g)) @ p["wo"].astype(cd)
+    return out, new_shift, state
+
+
+def _chunked_recurrence(cfg: ModelConfig, r, k, v, w, u, state):
+    """Chunkwise-parallel RWKV6 recurrence (the TPU-native formulation).
+
+    Derivation: with S_t = diag(w_t) S_{t-1} + k_t v_tᵀ and
+    y_t = r_tᵀ S_{t-1} + ((r_t⊙u)·k_t) v_t, let p_t = Π_{τ≤t} w_τ within a
+    chunk (p_0 = 1). Then::
+
+        y_t = (r_t ⊙ p_{t-1})ᵀ S_0                       (inter-chunk)
+            + Σ_{s<t} ((r_t ⊙ p_{t-1}/p_s)·k_s) v_s      (intra, matmul)
+            + ((r_t ⊙ u)·k_t) v_t                        (diagonal bonus)
+        S_T = p_T ⊙ S_0 + (k ⊙ p_T/p)ᵀ V                 (one update/chunk)
+
+    The state is read+written once per chunk instead of once per token —
+    the recurrence's HBM traffic drops by the chunk length, and the
+    intra-chunk term is a (T×T)·(T×D) masked matmul pair on the MXU.
+    Chunk length is kept short (32) so the in-chunk decay products stay
+    well inside f32 range. Exactness vs the per-token scan is covered by
+    tests/test_models_smoke.py::test_rwkv_chunked_matches_scan.
+    """
+    b, s, h, dh = r.shape
+    t = min(cfg.scan_chunk, s)
+    assert s % t == 0, f"seq {s} must divide chunk {t}"
+    n_chunks = s // t
+    f32 = jnp.float32
+
+    def reshape(a):
+        return a.astype(f32).reshape(b, n_chunks, t, h, dh).transpose(
+            1, 0, 3, 2, 4)                                # (C,B,H,T,D)
+
+    rc, kc, vc, wc = (reshape(a) for a in (r, k, v, w))
+    uu = u.astype(f32)                                    # (H,D)
+
+    def chunk_step(S, inp):
+        r_, k_, v_, w_ = inp                              # (B,H,T,D)
+        p = jnp.cumprod(w_, axis=2)                       # p_t, t=1..T
+        p_prev = jnp.concatenate(
+            [jnp.ones_like(p[:, :, :1]), p[:, :, :-1]], axis=2)  # p_{t-1}
+        q = r_ * p_prev                                   # (B,H,T,D)
+        kappa = k_ / jnp.maximum(p, 1e-30)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, kappa)  # (B,H,T,T)
+        mask = jnp.tril(jnp.ones((t, t), bool), k=-1)     # strict s<t
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = jnp.einsum("bhts,bhsd->bhtd", scores, v_)     # intra-chunk
+        y = y + jnp.einsum("bhtd,bhde->bhte", q, S)       # inter-chunk
+        diag = jnp.sum(r_ * uu[None, :, None, :] * k_, axis=-1,
+                       keepdims=True)
+        y = y + diag * v_                                 # current token
+        decay = p[:, :, -1, :]                            # p_T (B,H,D)
+        S = decay[..., None] * S + jnp.einsum(
+            "bhtd,bhte->bhde", k_ * (decay[:, :, None] /
+                                     jnp.maximum(p, 1e-30)), v_)
+        return S, y
+
+    if cfg.remat:
+        chunk_step = jax.checkpoint(chunk_step)
+    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    # (C,B,H,T,D) -> (B, S, H, D)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+    return state, y
+
+
+def _channel_mix(p, x, shift_prev):
+    cd = x.dtype
+    shifted, new_shift = R.token_shift(x, shift_prev)
+    mk = p["mu_ff"][0].astype(cd)
+    mr = p["mu_ff"][1].astype(cd)
+    xk = x * mk + shifted * (1.0 - mk)
+    xr = x * mr + shifted * (1.0 - mr)
+    k = jnp.square(jax.nn.relu(xk @ p["wk_ff"].astype(cd)))
+    return jax.nn.sigmoid(xr @ p["wr_ff"].astype(cd)) * (k @ p["wv_ff"].astype(cd)), new_shift
+
+
+def _block(cfg: ModelConfig, p, x, att_shift, ffn_shift, state):
+    h = L.layernorm(x, p["ln1_g"], p["ln1_b"])
+    att, att_shift, state = _time_mix(cfg, p, h, att_shift, state)
+    x = x + att
+    x = lshard(x, "batch", "seq", "embed")
+    h2 = L.layernorm(x, p["ln2_g"], p["ln2_b"])
+    ffn, ffn_shift = _channel_mix(p, h2, ffn_shift)
+    x = x + ffn
+    return lshard(x, "batch", "seq", "embed"), att_shift, ffn_shift, state
+
+
+def _stack(cfg: ModelConfig, params, x, cache):
+    """Scan the layer stack; cache holds (att_shift, ffn_shift, state) (L,...)."""
+
+    def body(x, inputs):
+        p, a_s, f_s, st = inputs
+        x, a_s, f_s, st = _block(cfg, p, x, a_s, f_s, st)
+        return x, (a_s, f_s, st)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (a_s, f_s, st) = jax.lax.scan(
+        body, x, (params["layers"], cache["att_shift"], cache["ffn_shift"],
+                  cache["state"])
+    )
+    return x, dict(att_shift=a_s, ffn_shift=f_s, state=st, pos=cache["pos"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0):
+    lbd = (cfg.n_layers, batch, cfg.d_model)
+    return dict(
+        att_shift=jnp.zeros(lbd, L.COMPUTE_DTYPE),
+        ffn_shift=jnp.zeros(lbd, L.COMPUTE_DTYPE),
+        state=jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_heads, cfg.ssm_head_dim,
+             cfg.ssm_head_dim), jnp.float32
+        ),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels):
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    x, _ = _stack(cfg, params, x, init_cache(cfg, tokens.shape[0]))
+    x = L.layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    return L.lm_loss(x, params["w_out"].astype(x.dtype), labels)
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    b, s = tokens.shape
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    x, cache = _stack(cfg, params, x, init_cache(cfg, b))
+    x = L.layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = (x[:, -1] @ params["w_out"].astype(x.dtype)).astype(jnp.float32)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]  # (B,1,d)
+    cache2 = dict(cache)
+    cache2["pos"] = cache["pos"]
+    x, cache2 = _stack(cfg, params, x, cache2)
+    x = L.layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = (x[:, 0] @ params["w_out"].astype(x.dtype)).astype(jnp.float32)
+    cache2["pos"] = cache["pos"] + 1
+    return logits, cache2

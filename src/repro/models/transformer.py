@@ -1,0 +1,201 @@
+"""Decoder-only transformer (dense GQA + MoE variants).
+
+Covers qwen2-72b/7b, qwen2.5-3b, nemotron-4-15b (squared-ReLU, ungated),
+chameleon-34b (qk-norm, VQ-token vocab), qwen2-moe-a2.7b and
+phi3.5-moe-42b-a6.6b (cfg.is_moe → routed FF via ``models.moe``).
+
+Layer stack is scanned + rematerialized; KV caches are (L, B, S, Hkv, D)
+with the sequence axis sharded over the model axis for decode (DESIGN §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    k_embed, k_out, k_layers = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = dict(
+            ln1=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+            ln2=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+            attn=L.attn_init(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+                n_layers_scale=cfg.n_layers,
+            ),
+        )
+        if cfg.is_moe:
+            p["ff"] = moe_lib.moe_init(cfg, kf)
+        else:
+            p["ff"] = L.mlp_init(kf, cfg.d_model, cfg.d_ff,
+                                 gated=cfg.gated_mlp, n_layers_scale=cfg.n_layers)
+        return p
+
+    params = dict(
+        embed=L.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        ln_f=jnp.ones((cfg.d_model,), L.PARAM_DTYPE),
+        layers=jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers)),
+    )
+    if not cfg.tie_embeddings:
+        params["w_out"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                       scale=0.02)
+    return params
+
+
+def output_matrix(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _ff(cfg: ModelConfig, p_ff, h):
+    if cfg.is_moe:
+        return moe_lib.moe_apply(cfg, p_ff, h)
+    return L.mlp_apply(p_ff, h, cfg.activation), jnp.float32(0.0)
+
+
+def block_fwd(cfg: ModelConfig, p, x, positions):
+    """Full-sequence (train / prefill) block. Returns (x, (k, v, aux))."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         positions, rope_theta=cfg.rope_theta,
+                         use_rope=cfg.use_rope)
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = lshard(v, "batch", "seq", "kv_heads", "head_dim")
+    attn = L.attention_ref(q, k, v, causal=True)
+    attn = attn.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.hd)
+    x = x + attn @ p["attn"]["wo"].astype(x.dtype)
+    x = lshard(x, "batch", "seq", "embed")
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    ff_out, aux = _ff(cfg, p["ff"], h2)
+    x = x + ff_out
+    x = lshard(x, "batch", "seq", "embed")
+    # cache-destined copies are sequence-sharded (kv_seq → model axis) so a
+    # 32k-token prefill's collected KV fits per-device HBM
+    k_out = lshard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_out = lshard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return x, (k_out, v_out, aux)
+
+
+def block_decode(cfg: ModelConfig, p, x, k_cache, v_cache, pos):
+    """One-token block. x: (B,1,d); caches (B,S,Hkv,D); pos scalar."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                         positions, rope_theta=cfg.rope_theta,
+                         use_rope=cfg.use_rope)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    k_cache = lshard(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_cache = lshard(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    attn = L.decode_attention_ref(q, k_cache, v_cache, pos + 1)
+    attn = attn.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+    x = x + attn @ p["attn"]["wo"].astype(x.dtype)
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    ff_out, _ = _ff(cfg, p["ff"], h2)
+    return x + ff_out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg: ModelConfig, layers, x, positions, *, collect_kv: bool):
+    def body(carry, p):
+        x, aux_acc = carry
+        x, (k, v, aux) = block_fwd(cfg, p, x, positions)
+        ys = (k, v) if collect_kv else None
+        return (x, aux_acc + aux), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.float32(0.0)), layers)
+    return x, aux, kv
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    if not cfg.use_rope:
+        pos = L.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+    return lshard(x, "batch", "seq", "embed")
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels):
+    """Teacher-forced LM loss. tokens/labels: (B, S) int32."""
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+    x, aux, _ = _scan_stack(cfg, params["layers"], x, positions,
+                            collect_kv=False)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    nll = L.lm_loss(x, output_matrix(cfg, params).astype(x.dtype), labels)
+    return nll + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    dt = jnp.float32 if cfg.cache_f32 else L.COMPUTE_DTYPE
+    return dict(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Returns (last-position logits (B, V), cache)."""
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    x, _, (ks, vs) = _scan_stack(cfg, params["layers"], x, positions,
+                                 collect_kv=True)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ output_matrix(cfg, params).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    cache = dict(k=ks, v=vs, pos=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """tokens: (B, 1). Returns (logits (B, V), updated cache)."""
+    pos = cache["pos"]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    if not cfg.use_rope:
+        # sinusoidal at the current position
+        pe = L.sinusoidal_positions(1, cfg.d_model)  # placeholder freq row
+        x = x + pe[None].astype(x.dtype)
+
+    def body(x, inputs):
+        p, kc, vc = inputs
+        x, kc, vc = block_decode(cfg, p, x, kc, vc, pos)
+        return x, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ output_matrix(cfg, params).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, dict(k=ks, v=vs, pos=pos + 1)

@@ -1,0 +1,68 @@
+"""Paged decode step for dense/MoE transformers (continuous batching).
+
+Unlike ``transformer.decode_step`` (dense per-request cache, used by the
+dry-run serve cells), this path reads K/V through *direct block tables*
+from a shared paged pool — the serving integration of the paper's
+direct-access principle. Per-sequence positions come from ``lengths``
+(sequences in a continuous batch are at different positions).
+
+The attention inner loop is ``kernels/paged_attention`` (Pallas on TPU,
+oracle on CPU). Pool writes happen in-step at (table[len // bs], len % bs).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.transformer import output_matrix
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def paged_decode_step(cfg: ModelConfig, params, pool_k, pool_v, tables,
+                      lengths, tokens):
+    """One decode step for B sequences.
+
+    pool_k/pool_v: (L, nb, bs, Hkv, D); tables: (B, M) int32 (direct);
+    lengths: (B,) int32 (tokens already in each sequence);
+    tokens: (B, 1) int32. Returns (logits (B, V), new_pool_k, new_pool_v).
+    """
+    b = tokens.shape[0]
+    bs = pool_k.shape[2]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]      # (B,1,d)
+    positions = lengths[:, None]                             # (B,1)
+
+    blk = jnp.take_along_axis(tables, (lengths // bs)[:, None], axis=1)[:, 0]
+    off = lengths % bs
+
+    def body(x, inputs):
+        p, pk, pv = inputs
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, positions, rope_theta=cfg.rope_theta,
+                             use_rope=cfg.use_rope)
+        pk = pk.at[blk, off].set(k[:, 0].astype(pk.dtype))
+        pv = pv.at[blk, off].set(v[:, 0].astype(pv.dtype))
+        attn = pa_ops.paged_attention(
+            q[:, 0].astype(L.COMPUTE_DTYPE), pk, pv, tables, lengths + 1
+        )
+        x = x + attn.reshape(b, 1, -1).astype(x.dtype) @ p["attn"]["wo"].astype(x.dtype)
+        h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff, _ = moe_lib.moe_apply(cfg, p["ff"], h2)
+        else:
+            ff = L.mlp_apply(p["ff"], h2, cfg.activation)
+        return x + ff, (pk, pv)
+
+    x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ output_matrix(cfg, params).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, pk, pv

@@ -1,0 +1,84 @@
+"""The pjit training step: loss → grads → AdamW, with optional grad accum."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import LM
+from repro.optim import adamw
+
+
+def make_train_step(model: LM, opt_cfg: adamw.AdamWConfig, *,
+                    accum_steps: int = 1, cast_bf16: bool = False,
+                    grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``accum_steps > 1`` splits the batch along axis 0 into microbatches and
+    accumulates grads in f32 (the memory knob for big train cells).
+    ``cast_bf16`` casts matrix params to bf16 *before* the FSDP all-gather,
+    halving both the gather wire bytes and the weight-read HBM traffic
+    (the cast happens shard-local; the model's own .astype becomes a no-op).
+    ``grad_shardings`` pins the grad (and accumulation-carry) sharding to
+    the parameter shardings — without it XLA keeps the scan carry
+    replicated and all-reduces *full-size* grads every microbatch instead
+    of reduce-scattering into the FSDP shards (measured 1.7 TB/dev → see
+    EXPERIMENTS.md §Perf cell A).
+    """
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def loss_fn(params, batch):
+        if cast_bf16:
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.ndim >= 2 and p.dtype == jnp.float32 else p,
+                params,
+            )
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _pin(grads)
+        else:
+            def micro(i):
+                return jax.tree.map(
+                    lambda x: x.reshape((accum_steps, -1) + x.shape[1:])[i],
+                    batch,
+                )
+
+            def body(carry, i):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro(i))
+                grads_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), grads_acc,
+                    _pin(g)
+                )
+                return (loss_acc + l, _pin(grads_acc)), None
+
+            zeros = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ))
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), jnp.arange(accum_steps)
+            )
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        params, opt_state, diag = adamw.apply(opt_cfg, grads, opt_state, params)
+        metrics = dict(loss=loss, **diag)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_state(model: LM, key):
+    params = model.init(key)
+    return params, adamw.init(params)

@@ -1,0 +1,196 @@
+"""Unit tests: entry format, chain ops, resolvers, store, streaming."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import format as fmt
+from repro.core import chain as chain_lib
+from repro.core import metrics, store
+
+
+def make_store(**kw):
+    kw.setdefault("n_pages", 128)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_chain", 16)
+    return store.create(**kw)
+
+
+def test_entry_pack_unpack_roundtrip():
+    ptr = jnp.array([0, 1, 12345, fmt.PTR_MASK], jnp.uint32)
+    bfi = jnp.array([0, 7, 999, fmt.BFI_MASK], jnp.uint32)
+    e = fmt.pack_entry(ptr, bfi, allocated=True, bfi_valid=True)
+    np.testing.assert_array_equal(fmt.entry_ptr(e), ptr)
+    np.testing.assert_array_equal(fmt.entry_bfi(e), bfi)
+    assert bool(jnp.all(fmt.entry_allocated(e)))
+    assert bool(jnp.all(fmt.entry_bfi_valid(e)))
+
+
+def test_unallocated_entry_is_all_zeros():
+    e = fmt.pack_entry(123, 5, allocated=False, bfi_valid=True)
+    np.testing.assert_array_equal(np.asarray(e), 0)
+
+
+def test_strip_extension_preserves_vanilla_view():
+    e = fmt.pack_entry(42, 9, allocated=True, bfi_valid=True)
+    v = fmt.strip_extension(e)
+    np.testing.assert_array_equal(fmt.entry_ptr(v), fmt.entry_ptr(e))
+    assert not bool(fmt.entry_bfi_valid(v))
+
+
+def test_write_read_roundtrip():
+    ch = make_store()
+    ids = jnp.array([0, 3, 127], jnp.int32)
+    data = jax.random.normal(jax.random.PRNGKey(0), (3, 8))
+    ch = store.write(ch, ids, data)
+    for method in ("vanilla", "direct", "auto"):
+        out, res = store.read(ch, ids, method=method)
+        np.testing.assert_allclose(out, data, rtol=1e-6)
+        assert bool(jnp.all(res.found))
+
+
+def test_unwritten_pages_read_as_zeros():
+    ch = make_store()
+    out, res = store.read(ch, jnp.array([5, 6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    assert not bool(jnp.any(res.found))
+
+
+def test_cow_snapshot_immutability():
+    """Writes after a snapshot must not change what the snapshot held."""
+    ch = make_store()
+    ids = jnp.array([1, 2], jnp.int32)
+    d0 = jnp.ones((2, 8))
+    ch = store.write(ch, ids, d0)
+    before = store.materialize(ch)
+    ch = store.snapshot(ch)
+    ch = store.write(ch, ids, 2 * d0)
+    after, _ = store.read(ch, ids)
+    np.testing.assert_allclose(after, 2 * d0)
+    # the backing layer's data pool rows were never touched
+    owner0 = store.read(ch, ids, method="direct")[1].owner
+    np.testing.assert_array_equal(np.asarray(owner0), 1)
+    np.testing.assert_allclose(
+        np.asarray(before[np.asarray(ids)]), np.asarray(d0), rtol=1e-6
+    )
+
+
+def test_direct_lookups_constant_vanilla_linear():
+    ch = make_store()
+    ids = jnp.array([7], jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((1, 8)))
+    for _ in range(6):
+        ch = store.snapshot(ch)
+    _, res_v = store.read(ch, ids, method="vanilla")
+    _, res_d = store.read(ch, ids, method="direct")
+    assert int(res_d.lookups[0]) == 1
+    # vanilla walks from the active volume down to the owner
+    assert int(res_v.lookups[0]) >= 1
+
+
+def test_vanilla_format_chain_walk_cost():
+    ch = make_store(scalable=False)
+    ids = jnp.array([7], jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((1, 8)))
+    for _ in range(6):
+        ch = store.snapshot(ch)
+    _, res = store.read(ch, ids, method="vanilla")
+    assert int(res.lookups[0]) == 7  # owner at layer 0, chain length 7
+
+
+def test_snapshot_copy_forward_semantics():
+    ch = make_store()
+    ids = jnp.array([1, 2, 3], jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((3, 8)))
+    ch = store.snapshot(ch)
+    # direct access on the new active volume sees everything with 1 lookup
+    _, res = store.read(ch, ids, method="direct")
+    assert bool(jnp.all(res.found))
+    np.testing.assert_array_equal(np.asarray(res.lookups), 1)
+    np.testing.assert_array_equal(np.asarray(res.owner), 0)
+
+
+def test_stream_preserves_content_and_shortens_chain():
+    ch = make_store()
+    key = jax.random.PRNGKey(1)
+    for i in range(5):
+        ids = jax.random.choice(jax.random.fold_in(key, i), 128, (16,),
+                                replace=False).astype(jnp.int32)
+        data = jax.random.normal(jax.random.fold_in(key, 100 + i), (16, 8))
+        ch = store.write(ch, ids, data)
+        ch = store.snapshot(ch)
+    before = store.materialize(ch)
+    for copy_data in (False, True):
+        ch2 = store.stream(ch, merge_upto=2, copy_data=copy_data)
+        after = store.materialize(ch2)
+        np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                                   rtol=1e-6)
+        assert int(ch2.length) == int(ch.length) - 2
+
+
+def test_convert_to_scalable_enables_direct():
+    ch = make_store(scalable=False)
+    ids = jnp.array([3, 9], jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((2, 8)))
+    ch = store.snapshot(ch)
+    ch = store.write(ch, jnp.array([9], jnp.int32), 2 * jnp.ones((1, 8)))
+    # direct on a vanilla chain finds nothing trustworthy
+    _, res = store.read(ch, ids, method="direct")
+    assert not bool(jnp.all(res.found))
+    ch2 = chain_lib.convert_to_scalable(ch)
+    out, res2 = store.read(ch2, ids, method="direct")
+    assert bool(jnp.all(res2.found))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(store.read(ch, ids, method="vanilla")[0]),
+        rtol=1e-6,
+    )
+
+
+def test_pool_overflow_flag():
+    ch = store.create(n_pages=64, page_size=4, max_chain=4, pool_capacity=8)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((16, 4)))
+    with pytest.raises(RuntimeError):
+        store.check_pool_capacity(ch)
+
+
+def test_eq2_matches_paper_example():
+    # paper: 50 GB disk, 64 KB clusters, 8 B entries → ~6 MB per snapshot
+    got = metrics.eq2_snapshot_overhead_bytes(50 * 2**30)
+    assert abs(got - 6.25 * 2**20) < 0.5 * 2**20
+
+
+def test_eq1_linear_in_chain_length():
+    a = metrics.eq1_average_cost(0.9, 0.05, 0.05, 10)
+    b = metrics.eq1_average_cost(0.9, 0.05, 0.05, 1000)
+    assert abs(b / a - 100.0) < 1e-6
+
+
+def test_compact_pool_preserves_reads():
+    ch = make_store()
+    key = jax.random.PRNGKey(2)
+    for i in range(6):
+        ids = jax.random.choice(jax.random.fold_in(key, i), 128, (24,),
+                                replace=False).astype(jnp.int32)
+        ch = store.write(ch, ids,
+                         jax.random.normal(jax.random.fold_in(key, 50 + i),
+                                           (24, 8)))
+        ch = store.snapshot(ch)
+    ch = store.stream(ch, merge_upto=3, copy_data=False)
+    before = store.materialize(ch)
+    compacted = chain_lib.compact_pool(ch)
+    after = store.materialize(compacted)
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after))
+    assert int(compacted.pool_cursor) <= int(ch.pool_cursor)
+
+
+def test_paper_setup_constants():
+    """The paper-setup config reproduces its own §6.5 numbers."""
+    from repro.configs.paper_chain import SETUP, headline_claims
+
+    assert SETUP.l2_cache_bytes_full(50 * 2**30) == 6_553_600  # 6.25 MiB
+    got = metrics.eq2_snapshot_overhead_bytes(
+        50 * 2**30, SETUP.cluster_bytes, SETUP.l2_entry_bytes, 0)
+    claims = headline_claims()
+    assert abs(got - claims["snapshot_overhead_bytes_50gb"]) / got < 0.1

@@ -1,0 +1,106 @@
+"""Unit tests for the HLO cost analyzer (trip counts, aliasing rules)."""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_shape_bytes():
+    assert ha._shape_bytes("f32[4,8]") == 128
+    assert ha._shape_bytes("bf16[10]") == 20
+    assert ha._shape_bytes("(f32[2], s32[3])") == 20
+    assert ha._shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_trip_weighted():
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        %cond (arg: (s32[], f32[64])) -> pred[] {
+          %arg = (s32[], f32[64]) parameter(0)
+          %c = s32[] constant(5)
+          %i = s32[] get-tuple-element(%arg), index=0
+          ROOT %cmp = pred[] compare(%i, %c), direction=LT
+        }
+
+        %body (arg: (s32[], f32[64])) -> (s32[], f32[64]) {
+          %arg = (s32[], f32[64]) parameter(0)
+          %x = f32[64]{0} get-tuple-element(%arg), index=1
+          %ar = f32[64]{0} all-reduce(%x), to_apply=%add
+          %i2 = s32[] get-tuple-element(%arg), index=0
+          ROOT %t = (s32[], f32[64]) tuple(%i2, %ar)
+        }
+
+        ENTRY %main (p: f32[64]) -> f32[64] {
+          %p = f32[64]{0} parameter(0)
+          %ag = f32[128]{0} all-gather(%p), dimensions={0}
+          %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body
+          ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+        }
+        """)
+    coll = ha.collective_bytes(hlo)
+    # all-reduce inside the x5 loop: 64*4*5; all-gather once: 128*4
+    assert coll["all-reduce"] == 64 * 4 * 5
+    assert coll["all-gather"] == 128 * 4
+
+
+def test_weighted_costs_dus_counts_slice_not_buffer():
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p: f32[1024,64]) -> f32[1024,64] {
+          %p = f32[1024,64]{1,0} parameter(0)
+          %u = f32[1,64]{1,0} parameter(1)
+          %z = s32[] constant(0)
+          ROOT %dus = f32[1024,64]{1,0} dynamic-update-slice(%p, %u, %z, %z)
+        }
+        """)
+    wc = ha.weighted_costs(hlo)
+    # 2x the 1x64 update, NOT the 1024x64 buffer
+    assert wc["hbm_bytes"] == 2 * 64 * 4
+
+
+def test_weighted_costs_dynamic_slice_counts_result():
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p: f32[1024,64]) -> f32[2,64] {
+          %p = f32[1024,64]{1,0} parameter(0)
+          %z = s32[] constant(0)
+          ROOT %ds = f32[2,64]{1,0} dynamic-slice(%p, %z, %z), dynamic_slice_sizes={2,64}
+        }
+        """)
+    wc = ha.weighted_costs(hlo)
+    assert wc["hbm_bytes"] == 2 * 2 * 64 * 4
+
+
+def test_weighted_flops_on_real_nested_scan():
+    """Nested scans (layers x microbatches) multiply correctly."""
+
+    @jax.jit
+    def f(x, ws):
+        def outer(x, _):
+            def inner(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner, x, ws)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=3)
+        return x
+
+    m = 32
+    comp = f.lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((4, m, m), jnp.float32),
+    ).compile()
+    wc = ha.weighted_costs(comp.as_text())
+    assert wc["flops"] == 2.0 * m * m * m * 4 * 3
+
+
+def test_multipliers_handle_missing_trip_count():
+    # a while with no integer constant in the cond defaults to x1
+    comps = {"main": "while(%x), condition=%c, body=%b", "c": "", "b": ""}
+    mult = ha._multipliers(comps)
+    assert mult["b"] == 1
