@@ -1,0 +1,179 @@
+"""Multi-tenant fleet benchmark: batched resolve/COW vs a per-disk loop.
+
+The paper's Eq. 1 scaling is measured per chain; the cloud trace in §3 is
+thousands of tenant disks hitting one backend concurrently. This scenario
+sweeps tenants × chain-length and times, for each cell:
+
+* ``fleet``  — one batched ``core.fleet`` resolve over all T tenants
+  (single dispatch, stacked tables, shared pool);
+* ``loop``   — the same resolution as a python loop over T single-chain
+  ``core.resolve`` calls (one dispatch + transfer per tenant — how a
+  per-disk driver fleet behaves);
+
+verifying bit-identical owner/found metadata between the two, plus the
+fleet-granularity Eq. 1 signal (vanilla lookups grow with chain length,
+direct stays at one per request).
+
+Run: ``PYTHONPATH=src python benchmarks/fleet.py --tenants 64``
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import emit, time_fn
+except ModuleNotFoundError:  # invoked as `python benchmarks/fleet.py`
+    import pathlib
+    import sys
+
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
+    from benchmarks.common import emit, time_fn
+from repro.core import fleet as fleet_lib
+from repro.core import resolve as resolve_lib
+from repro.core import store
+
+
+def build_fleet(n_tenants: int, chain_len: int, *, n_pages: int = 512,
+                page_size: int = 16, writes_per_layer: int = 32,
+                seed: int = 0):
+    """A fleet of ``n_tenants`` chains of length ``chain_len`` plus the
+    equivalent list of independent single chains (same logical content)."""
+    lease_quantum = 64
+    # each tenant's rows round up to whole lease quanta (fragmentation)
+    spec = fleet_lib.FleetSpec(
+        n_tenants=n_tenants,
+        n_pages=n_pages,
+        page_size=page_size,
+        max_chain=chain_len + 1,
+        pool_capacity=_round_up(chain_len * writes_per_layer,
+                                lease_quantum) * n_tenants,
+        lease_quantum=lease_quantum,
+    )
+    fl = fleet_lib.create(spec)
+    chains = [
+        store.create(n_pages=n_pages, page_size=page_size,
+                     max_chain=chain_len + 1,
+                     pool_capacity=chain_len * writes_per_layer + 64)
+        for _ in range(n_tenants)
+    ]
+    rng = np.random.default_rng(seed)
+    for layer in range(chain_len):
+        ids = np.stack([
+            rng.choice(n_pages, writes_per_layer, replace=False)
+            for _ in range(n_tenants)
+        ]).astype(np.int32)
+        data = rng.standard_normal(
+            (n_tenants, writes_per_layer, page_size)).astype(np.float32)
+        fl = fleet_lib.write(fl, jnp.asarray(ids), jnp.asarray(data))
+        for t in range(n_tenants):
+            chains[t] = store.write(chains[t], jnp.asarray(ids[t]),
+                                    jnp.asarray(data[t]))
+        if layer < chain_len - 1:
+            fl = fleet_lib.snapshot(fl)
+            chains = [store.snapshot(c) for c in chains]
+    fleet_lib.check_pool_capacity(fl)
+    return fl, chains
+
+
+def _round_up(n: int, q: int) -> int:
+    return -(-n // q) * q
+
+
+def verify_equivalence(fl, chains, ids, method: str) -> None:
+    """Batched fleet resolution must match the per-chain loop exactly."""
+    fr = fleet_lib.get_resolver(method)(fl, ids)
+    single = resolve_lib.get_resolver(method)
+    for t, ch in enumerate(chains):
+        cr = single(ch, ids[t])
+        for field in ("owner", "found", "zero", "lookups"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(fr, field)[t]),
+                np.asarray(getattr(cr, field)),
+                err_msg=f"{method} tenant {t} field {field}",
+            )
+    # data equality (ptr spaces differ: shared pool vs per-chain pools)
+    fleet_data, _ = fleet_lib.read(fl, ids, method=method)
+    for t, ch in enumerate(chains):
+        got, _ = store.read(ch, ids[t], method=method)
+        np.testing.assert_allclose(np.asarray(fleet_data[t]), np.asarray(got),
+                                   rtol=1e-6, err_msg=f"{method} tenant {t}")
+
+
+def bench_cell(n_tenants: int, chain_len: int, *, batch: int, method: str,
+               seed: int = 0, verify: bool = True, iters: int = 9) -> dict:
+    fl, chains = build_fleet(n_tenants, chain_len, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ids = jnp.asarray(
+        rng.integers(0, fl.spec.n_pages, (n_tenants, batch)), jnp.int32)
+    if verify:
+        verify_equivalence(fl, chains, ids, method)
+
+    fleet_resolver = fleet_lib.get_resolver(method)
+    single = resolve_lib.get_resolver(method)
+
+    def run_fleet(ids):
+        return fleet_resolver(fl, ids)
+
+    def run_loop(ids):
+        return [single(ch, ids[t]) for t, ch in enumerate(chains)]
+
+    t_fleet = time_fn(run_fleet, ids, warmup=2, iters=iters)
+    t_loop = time_fn(run_loop, ids, warmup=2, iters=iters)
+    pages = n_tenants * batch
+    res = fleet_resolver(fl, ids)
+    return dict(
+        tenants=n_tenants,
+        chain=chain_len,
+        method=method,
+        fleet_us=t_fleet * 1e6,
+        loop_us=t_loop * 1e6,
+        speedup=t_loop / t_fleet,
+        fleet_mpages_s=pages / t_fleet / 1e6,
+        mean_lookups=float(jnp.mean(res.lookups)),
+    )
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tenants", type=int, nargs="+", default=[64])
+    p.add_argument("--chain-lengths", type=int, nargs="+", default=[4, 16])
+    p.add_argument("--methods", nargs="+",
+                   default=["vanilla", "direct"],
+                   choices=["vanilla", "direct", "auto"])
+    p.add_argument("--batch", type=int, default=256,
+                   help="resolve batch per tenant per call")
+    p.add_argument("--no-verify", action="store_true")
+    p.add_argument("--iters", type=int, default=9,
+                   help="timing iterations per cell (median reported)")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    ok = True
+    for method in args.methods:
+        for t in args.tenants:
+            for c in args.chain_lengths:
+                r = bench_cell(t, c, batch=args.batch, method=method,
+                               seed=args.seed, verify=not args.no_verify,
+                               iters=args.iters)
+                emit(
+                    f"fleet_{method}_t{t}_c{c}", r["fleet_us"],
+                    f"loop_us={r['loop_us']:.0f};speedup={r['speedup']:.1f}x;"
+                    f"fleet_mpages_s={r['fleet_mpages_s']:.2f};"
+                    f"mean_lookups={r['mean_lookups']:.1f}",
+                )
+                if t >= 64 and r["speedup"] < 5.0:
+                    ok = False
+                    print(f"WARNING: speedup {r['speedup']:.1f}x < 5x "
+                          f"at {t} tenants ({method}, chain {c})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

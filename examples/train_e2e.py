@@ -8,7 +8,6 @@ checkpoints, a simulated crash, restart, and goodput accounting.
 import argparse
 import dataclasses
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig

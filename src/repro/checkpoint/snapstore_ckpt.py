@@ -144,8 +144,10 @@ class SnapshotCheckpointer:
             self.chain = store_lib.write(
                 self.chain, jnp.asarray(ids), pages[jnp.asarray(ids)]
             )
-            store_lib.check_pool_capacity(self.chain)
         self.chain = store_lib.snapshot(self.chain)
+        # guard after the snapshot so a drop (chain at max_chain) surfaces
+        # on THIS save, before the next save overwrites the active volume
+        store_lib.check_pool_capacity(self.chain)
         self._shadow = pages
         st = dict(
             pages_written=int(ids.size),
@@ -213,6 +215,7 @@ class SnapshotCheckpointer:
             pool_cursor=np.asarray(self.chain.pool_cursor),
             length=np.asarray(self.chain.length),
             overflow=np.asarray(self.chain.overflow),
+            snap_dropped=np.asarray(self.chain.snap_dropped),
             shadow=np.asarray(self._shadow) if self._shadow is not None else np.zeros(0),
         )
 
@@ -228,6 +231,9 @@ class SnapshotCheckpointer:
             pool_cursor=jnp.asarray(z["pool_cursor"]),
             length=jnp.asarray(z["length"]),
             overflow=jnp.asarray(z["overflow"]),
+            snap_dropped=(jnp.asarray(z["snap_dropped"])
+                          if "snap_dropped" in z.files
+                          else jnp.zeros((), bool)),
         )
         self._shadow = jnp.asarray(z["shadow"]) if z["shadow"].size else None
 

@@ -13,4 +13,5 @@ from repro.core.resolve import (  # noqa: F401
     resolve_direct,
     resolve_vanilla,
 )
-from repro.core import cache, metrics, store  # noqa: F401
+from repro.core import cache, fleet, metrics, store  # noqa: F401
+from repro.core.fleet import ChainFleet, FleetSpec  # noqa: F401

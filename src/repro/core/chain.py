@@ -82,7 +82,9 @@ class Chain:
     pool: jax.Array        # (pool_capacity, page_size) dtype
     pool_cursor: jax.Array  # () int32 — next free pool row
     length: jax.Array      # () int32 — #files in chain; active = length - 1
-    overflow: jax.Array    # () bool — a write ran past pool_capacity
+    overflow: jax.Array      # () bool — a write ran past pool_capacity
+    snap_dropped: jax.Array  # () bool — a snapshot was attempted (and
+                             # dropped) on a chain already at max_chain
 
     @property
     def active(self) -> jax.Array:
@@ -100,7 +102,57 @@ def create(spec: ChainSpec, *, scalable: bool = True) -> Chain:
         pool_cursor=jnp.zeros((), jnp.int32),
         length=jnp.ones((), jnp.int32),
         overflow=jnp.zeros((), bool),
+        snap_dropped=jnp.zeros((), bool),
     )
+
+
+def write_tables(l1: jax.Array, l2: jax.Array, active: jax.Array,
+                 page_ids: jax.Array, rows: jax.Array, *, scalable,
+                 l2_per_table: int, mask=None):
+    """Stamp COW entries for ``rows`` into the active volume's L1/L2.
+
+    Shared by the single-chain ``write`` and the fleet's batched write
+    (which vmaps it over the tenant axis). ``active`` may be a traced
+    scalar; ``scalable`` a python bool or a traced boolean scalar;
+    ``mask`` (B,) bool suppresses updates where False (inactive tenants).
+    Returns the updated ``(l1, l2)``.
+    """
+    bsz = page_ids.shape[0]
+    page_ids = page_ids.astype(jnp.int32)
+    entries = fmt.pack_entry(
+        rows,
+        jnp.broadcast_to(active.astype(jnp.uint32), (bsz,)),
+        allocated=True,
+        bfi_valid=scalable,
+    )
+    n_pages = l2.shape[-2]
+    n_l1 = l1.shape[-1]
+    mask = jnp.broadcast_to(
+        jnp.asarray(True if mask is None else mask, bool), (bsz,)
+    )
+    # masked-out entries scatter to the OOB-high drop sentinel (negative
+    # indices would wrap); surviving indices are unique per the write
+    # contract, so no duplicate-index ordering hazard remains
+    l2 = l2.at[active, jnp.where(mask, page_ids, n_pages)].set(
+        entries, mode="drop"
+    )
+    tables = jnp.where(mask, page_ids // l2_per_table, n_l1)
+    l1 = l1.at[active, tables].set(jnp.uint32(1), mode="drop")
+    return l1, l2
+
+
+def copy_forward_tables(l1: jax.Array, l2: jax.Array, new: jax.Array):
+    """sQEMU §5.4 snapshot copy-forward: duplicate the previous active
+    volume's entire L1/L2 set into layer ``new`` (a traced index).
+
+    The new volume then indexes the whole chain, keeping direct access
+    O(1). Shared by ``snapshot`` and the fleet's per-tenant snapshot.
+    """
+    prev_l1 = jax.lax.dynamic_index_in_dim(l1, new - 1, 0)
+    prev_l2 = jax.lax.dynamic_index_in_dim(l2, new - 1, 0)
+    l1 = jax.lax.dynamic_update_index_in_dim(l1, prev_l1, new, 0)
+    l2 = jax.lax.dynamic_update_index_in_dim(l2, prev_l2, new, 0)
+    return l1, l2
 
 
 @jax.jit
@@ -116,47 +168,48 @@ def write(chain: Chain, page_ids: jax.Array, data: jax.Array) -> Chain:
     """
     spec = chain.spec
     bsz = page_ids.shape[0]
-    page_ids = page_ids.astype(jnp.int32)
     rows = chain.pool_cursor + jnp.arange(bsz, dtype=jnp.int32)
-    overflow = chain.overflow | (rows[-1] >= spec.pool_capacity)
-    safe_rows = jnp.minimum(rows, spec.pool_capacity - 1)
-    pool = chain.pool.at[safe_rows].set(data.astype(spec.dtype))
-
-    active = chain.length - 1
-    entries = fmt.pack_entry(
-        safe_rows,
-        jnp.full((bsz,), 0, jnp.uint32) + active.astype(jnp.uint32),
-        allocated=True,
-        bfi_valid=chain.scalable,
+    ok = rows < spec.pool_capacity
+    overflow = chain.overflow | ~jnp.all(ok)
+    # overflow rows are dropped (OOB-high scatter sentinel), never clamped
+    # onto the last pool row — same contract as fleet.write
+    pool = chain.pool.at[jnp.where(ok, rows, spec.pool_capacity)].set(
+        data.astype(spec.dtype), mode="drop"
     )
-    l2 = chain.l2.at[active, page_ids].set(entries)
-    l1 = chain.l1.at[active, page_ids // spec.l2_per_table].set(jnp.uint32(1))
+
+    l1, l2 = write_tables(
+        chain.l1, chain.l2, chain.length - 1, page_ids,
+        jnp.where(ok, rows, 0),
+        scalable=chain.scalable, l2_per_table=spec.l2_per_table, mask=ok,
+    )
     return dataclasses.replace(
         chain,
         l1=l1,
         l2=l2,
         pool=pool,
-        pool_cursor=chain.pool_cursor + bsz,
+        pool_cursor=chain.pool_cursor + jnp.sum(ok, dtype=jnp.int32),
         overflow=overflow,
     )
 
 
 @partial(jax.jit, static_argnames=("scalable",))
 def _snapshot_impl(chain: Chain, scalable: bool) -> Chain:
-    new = chain.length  # index the new active volume will take
+    # a full chain cannot snapshot: cap length and flag overflow (same
+    # semantics as fleet.snapshot), else later writes scatter out of bounds
+    can = chain.length < chain.spec.max_chain
     if scalable:
-        # sQEMU §5.4: copy the previous active volume's entire L1/L2 set
-        # into the new active volume. backing_file_index is preserved, so
-        # the new volume indexes the whole chain (direct access).
-        prev_l1 = jax.lax.dynamic_index_in_dim(chain.l1, new - 1, 0)
-        prev_l2 = jax.lax.dynamic_index_in_dim(chain.l2, new - 1, 0)
-        l1 = jax.lax.dynamic_update_index_in_dim(chain.l1, prev_l1, new, 0)
-        l2 = jax.lax.dynamic_update_index_in_dim(chain.l2, prev_l2, new, 0)
+        c1, c2 = copy_forward_tables(chain.l1, chain.l2, chain.length)
+        l1 = jnp.where(can, c1, chain.l1)
+        l2 = jnp.where(can, c2, chain.l2)
     else:
         # vanilla Qcow2: the new active volume starts with no tables at all
         # (layers above `length` are still all-zeros by construction).
         l1, l2 = chain.l1, chain.l2
-    return dataclasses.replace(chain, l1=l1, l2=l2, length=chain.length + 1)
+    return dataclasses.replace(
+        chain, l1=l1, l2=l2,
+        length=chain.length + can.astype(jnp.int32),
+        snap_dropped=chain.snap_dropped | ~can,
+    )
 
 
 def snapshot(chain: Chain, *, scalable: bool | None = None) -> Chain:
@@ -259,6 +312,8 @@ def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
     merged_l1 = jnp.max(chain.l1[:k], axis=0)
     l1 = l1.at[0].set(merged_l1)
     l1 = l1.at[1:1 + n_upper].set(upper_l1)
+    # the dropped-snapshot flag is resolved only if streaming actually made
+    # room (merge_upto=0 merges layer 0 into itself and shortens nothing)
     return dataclasses.replace(
         chain,
         l1=l1,
@@ -266,6 +321,7 @@ def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
         pool=pool,
         pool_cursor=jnp.asarray(cursor, jnp.int32),
         length=jnp.asarray(new_len, jnp.int32),
+        snap_dropped=chain.snap_dropped & (new_len >= spec.max_chain),
     )
 
 
@@ -303,6 +359,8 @@ def compact_pool(chain: Chain) -> Chain:
         zero=fmt.entry_zero(entries),
     )
     l2 = chain.l2.at[:length].set(new_entries)
+    # GC resolves pool overflow; snap_dropped is chain exhaustion and is
+    # untouched (compaction frees rows, it doesn't shorten the chain)
     return dataclasses.replace(
         chain,
         l2=l2,

@@ -1,0 +1,413 @@
+"""ChainFleet: N independent snapshot chains over one shared page pool.
+
+The paper's evaluation (and ``chain.py``) operates on one chain at a time,
+but the cloud trace in §3 is thousands of tenant disks hitting a shared
+storage backend concurrently. ``ChainFleet`` is the fleet-granularity
+substrate: a *stacked* representation of ``n_tenants`` chains —
+
+* per-tenant L1/L2 index stacks ``(T, max_chain, ...)`` and per-tenant
+  chain ``length`` / ``scalable`` / ``overflow`` state;
+* **one global page pool** shared by every tenant (the single-HBM analogue
+  of the provider's backend), carved into fixed-size *lease quanta* by a
+  fleet-level allocator: a tenant acquires whole quanta on demand, and its
+  n-th allocated row lives at ``lease_index[t, n // Q] * Q + n % Q``.
+  Leases are disjoint, so concurrent tenant writes never collide and a
+  tenant exhausting the pool flags only its own ``overflow``.
+
+Every data-path operation is batched across the fleet inside a single jit:
+
+* ``resolve_{vanilla,direct,auto}`` vmap the table-level resolvers from
+  ``core.resolve`` over the tenant axis — one dispatch for the whole
+  fleet instead of T dispatches (and T re-traces) of the per-chain path;
+* ``write`` performs fleet-wide COW: lease acquisition, pool scatter and
+  per-tenant L1/L2 stamping for all tenants at once, with an optional
+  per-tenant mask for partial batches;
+* ``snapshot`` snapshots any subset of tenants, honouring each tenant's
+  format flag (mixed scalable/vanilla fleets are first-class: ``scalable``
+  is a traced per-tenant array, not a static).
+
+The single-chain paths in ``chain.py``/``resolve.py`` share the same
+helpers (``write_tables``, ``copy_forward_tables``, ``*_tables``
+resolvers), so fleet and chain semantics cannot drift apart; the test
+suite additionally property-checks per-tenant fleet resolution against a
+python loop over single chains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chain as chain_lib
+from repro.core import format as fmt
+from repro.core import resolve as resolve_lib
+from repro.core.chain import Chain, ChainSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Static geometry of a fleet (hashable; safe as a jit static arg)."""
+
+    n_tenants: int
+    n_pages: int
+    page_size: int
+    max_chain: int
+    pool_capacity: int       # global pool rows shared by the whole fleet
+    lease_quantum: int = 64  # pool rows acquired per lease
+    l2_per_table: int = 64
+    slice_len: int = 16
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.n_tenants < 1:
+            raise ValueError("n_tenants must be >= 1")
+        if self.pool_capacity % self.lease_quantum != 0:
+            raise ValueError("pool_capacity must be a multiple of lease_quantum")
+        # delegate the per-chain validations (bit widths, divisibility)
+        self.chain_spec()
+
+    @property
+    def n_quanta(self) -> int:
+        return self.pool_capacity // self.lease_quantum
+
+    @property
+    def n_l1(self) -> int:
+        return self.n_pages // self.l2_per_table
+
+    def chain_spec(self) -> ChainSpec:
+        """The per-tenant view: same geometry, the shared (global) pool."""
+        return ChainSpec(
+            n_pages=self.n_pages,
+            page_size=self.page_size,
+            max_chain=self.max_chain,
+            pool_capacity=self.pool_capacity,
+            l2_per_table=self.l2_per_table,
+            slice_len=self.slice_len,
+            dtype=self.dtype,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ChainFleet:
+    spec: FleetSpec = dataclasses.field(metadata=dict(static=True))
+    l1: jax.Array           # (T, max_chain, n_l1) uint32
+    l2: jax.Array           # (T, max_chain, n_pages, 2) uint32
+    pool: jax.Array         # (pool_capacity, page_size) dtype — shared
+    lease_owner: jax.Array  # (n_quanta,) int32 — owning tenant, -1 = free
+    lease_index: jax.Array  # (T, n_quanta) int32 — quantum ids in lease order
+    lease_count: jax.Array  # (T,) int32 — leases held per tenant
+    alloc_count: jax.Array  # (T,) int32 — pool rows allocated per tenant
+    length: jax.Array       # (T,) int32 — chain length per tenant
+    scalable: jax.Array     # (T,) bool — per-tenant format flag
+    overflow: jax.Array     # (T,) bool — per-tenant pool-lease exhaustion
+    snap_dropped: jax.Array  # (T,) bool — snapshot attempted at max_chain
+
+    @property
+    def n_tenants(self) -> int:
+        return self.spec.n_tenants
+
+    @property
+    def active(self) -> jax.Array:
+        return self.length - 1
+
+
+def create(spec: FleetSpec, *, scalable=True) -> ChainFleet:
+    """A fresh fleet: every tenant is a chain of length 1 with no leases.
+
+    ``scalable`` may be a python bool (uniform fleet) or a (T,) bool array
+    (mixed deployment: some tenants on the vanilla format).
+    """
+    t = spec.n_tenants
+    scal = jnp.broadcast_to(jnp.asarray(scalable, bool), (t,))
+    return ChainFleet(
+        spec=spec,
+        l1=jnp.zeros((t, spec.max_chain, spec.n_l1), jnp.uint32),
+        l2=fmt.empty_entries((t, spec.max_chain, spec.n_pages)),
+        pool=jnp.zeros((spec.pool_capacity, spec.page_size), spec.dtype),
+        lease_owner=jnp.full((spec.n_quanta,), -1, jnp.int32),
+        lease_index=jnp.full((t, spec.n_quanta), -1, jnp.int32),
+        lease_count=jnp.zeros((t,), jnp.int32),
+        alloc_count=jnp.zeros((t,), jnp.int32),
+        length=jnp.ones((t,), jnp.int32),
+        scalable=scal,
+        overflow=jnp.zeros((t,), bool),
+        snap_dropped=jnp.zeros((t,), bool),
+    )
+
+
+# -- fleet allocator ---------------------------------------------------------
+
+
+def _acquire_leases(fleet: ChainFleet, rows_needed: jax.Array):
+    """Grant each tenant enough fresh quanta to cover ``rows_needed`` more
+    rows. Fully vectorized: free quanta are ranked once and handed out in
+    tenant order via an exclusive cumsum. Returns the updated lease state
+    plus a per-tenant "went short" flag.
+    """
+    spec = fleet.spec
+    q = spec.lease_quantum
+    nq = spec.n_quanta
+    t = spec.n_tenants
+
+    new_total = fleet.alloc_count + rows_needed
+    want_leases = jnp.maximum(-(-new_total // q) - fleet.lease_count, 0)
+
+    free = fleet.lease_owner < 0
+    free_ids = jnp.nonzero(free, size=nq, fill_value=-1)[0]     # (nq,)
+    n_free = jnp.sum(free)
+
+    start = jnp.cumsum(want_leases) - want_leases               # (T,) exclusive
+    j = jnp.arange(nq, dtype=jnp.int32)[None, :]                # (1, nq)
+    want = j < want_leases[:, None]                             # (T, nq)
+    src = start[:, None] + j
+    ok = want & (src < n_free)
+    grant = jnp.where(ok, free_ids[jnp.clip(src, 0, nq - 1)], -1)  # (T, nq)
+    # compare against want_leases itself, not the (T, nq) grid: one batch can
+    # want more quanta than the whole pool holds (want_leases > nq)
+    short = jnp.sum(ok, axis=1) < want_leases
+
+    tids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, nq))
+    # drop-sentinel must be out-of-bounds HIGH: negative indices wrap in JAX
+    # scatters even under mode="drop".
+    scatter_idx = jnp.where(ok, grant, nq)
+    lease_owner = fleet.lease_owner.at[scatter_idx.reshape(-1)].set(
+        tids.reshape(-1), mode="drop"
+    )
+
+    def stitch(li, cnt, grant_t, ok_t):
+        # granted positions are distinct and < nq (total leases can't exceed
+        # n_quanta); non-grants scatter to the OOB-high drop sentinel, so no
+        # duplicate-index collisions can clobber a real grant
+        pos = jnp.where(ok_t, cnt + jnp.arange(nq, dtype=jnp.int32), nq)
+        return li.at[pos].set(grant_t, mode="drop")
+
+    lease_index = jax.vmap(stitch)(fleet.lease_index, fleet.lease_count,
+                                   grant, ok)
+    lease_count = fleet.lease_count + jnp.sum(ok, axis=1)
+    return lease_owner, lease_index, lease_count, short
+
+
+def _rows_for(spec: FleetSpec, lease_index: jax.Array,
+              alloc_count: jax.Array, bsz: int):
+    """Global pool rows for each tenant's next ``bsz`` allocations.
+
+    Returns ``(rows (T, B) int32, leased (T, B) bool)`` — ``rows`` is -1
+    where the tenant holds no lease for that slot.
+    """
+    q = spec.lease_quantum
+    nq = spec.n_quanta
+    local = alloc_count[:, None] + jnp.arange(bsz, dtype=jnp.int32)[None, :]
+    slot = local // q
+    # bound the gather: JAX clamps OOB indices to nq-1, which would alias
+    # post-exhaustion writes onto the final quantum's (immutable) rows
+    quantum = jnp.take_along_axis(lease_index, jnp.minimum(slot, nq - 1),
+                                  axis=1)
+    leased = (quantum >= 0) & (slot < nq)
+    rows = jnp.where(leased, quantum * q + local % q, -1)
+    return rows, leased
+
+
+# -- batched data path -------------------------------------------------------
+
+
+@jax.jit
+def write(fleet: ChainFleet, page_ids: jax.Array, data: jax.Array,
+          mask: jax.Array | None = None) -> ChainFleet:
+    """Fleet-wide COW write: one batch of pages per tenant, one dispatch.
+
+    ``page_ids``: (T, B) int32, unique within each tenant's batch;
+    ``data``: (T, B, page_size); ``mask``: optional (T,) bool selecting
+    which tenants participate (inactive tenants are untouched).
+
+    Semantics per tenant match ``chain.write``: fresh pool rows, active
+    volume's L1/L2 stamped, backing files immutable. Rows come from the
+    tenant's leased quanta; the allocator grants new quanta on demand and
+    flags ``overflow`` for tenants the pool cannot serve (their excess
+    pages are dropped — never written into another tenant's lease).
+    """
+    spec = fleet.spec
+    t, bsz = page_ids.shape
+    page_ids = page_ids.astype(jnp.int32)
+    tmask = (jnp.ones((t,), bool) if mask is None
+             else jnp.asarray(mask, bool))
+    need = jnp.where(tmask, bsz, 0).astype(jnp.int32)
+
+    lease_owner, lease_index, lease_count, short = _acquire_leases(fleet, need)
+    rows, leased = _rows_for(spec, lease_index, fleet.alloc_count, bsz)
+    valid = leased & tmask[:, None]                       # (T, B)
+
+    # drop-sentinel is out-of-bounds HIGH (negative indices wrap in scatters)
+    flat_rows = jnp.where(valid, rows, spec.pool_capacity).reshape(-1)
+    pool = fleet.pool.at[flat_rows].set(
+        data.astype(spec.dtype).reshape(t * bsz, -1), mode="drop"
+    )
+
+    stamp = partial(chain_lib.write_tables, l2_per_table=spec.l2_per_table)
+    l1, l2 = jax.vmap(
+        lambda l1_t, l2_t, act, pids, rows_t, scal, m:
+        stamp(l1_t, l2_t, act, pids, jnp.maximum(rows_t, 0),
+              scalable=scal, mask=m)
+    )(fleet.l1, fleet.l2, fleet.length - 1, page_ids, rows,
+      fleet.scalable, valid)
+
+    return dataclasses.replace(
+        fleet,
+        l1=l1,
+        l2=l2,
+        pool=pool,
+        lease_owner=lease_owner,
+        lease_index=lease_index,
+        lease_count=lease_count,
+        alloc_count=fleet.alloc_count + jnp.sum(valid, axis=1, dtype=jnp.int32),
+        overflow=fleet.overflow | (short & tmask),
+    )
+
+
+@jax.jit
+def snapshot(fleet: ChainFleet, mask: jax.Array | None = None,
+             scalable: jax.Array | None = None) -> ChainFleet:
+    """Per-tenant snapshot: freeze each selected tenant's active volume.
+
+    ``mask``: optional (T,) bool — which tenants snapshot this step.
+    ``scalable``: optional override (python bool or (T,) bool), as in
+    ``chain.snapshot`` — models a vanilla tool snapshotting a scalable
+    image. Defaults to each tenant's own format flag. Tenants already at
+    ``max_chain`` are skipped and flagged ``snap_dropped``.
+    """
+    spec = fleet.spec
+    t = spec.n_tenants
+    tmask = (jnp.ones((t,), bool) if mask is None
+             else jnp.asarray(mask, bool))
+    scal = (fleet.scalable if scalable is None
+            else jnp.broadcast_to(jnp.asarray(scalable, bool), (t,)))
+
+    can = tmask & (fleet.length < spec.max_chain)
+
+    def snap_one(l1_t, l2_t, len_t, do_copy):
+        c1, c2 = chain_lib.copy_forward_tables(l1_t, l2_t, len_t)
+        return (jnp.where(do_copy, c1, l1_t), jnp.where(do_copy, c2, l2_t))
+
+    l1, l2 = jax.vmap(snap_one)(fleet.l1, fleet.l2, fleet.length, can & scal)
+    return dataclasses.replace(
+        fleet,
+        l1=l1,
+        l2=l2,
+        length=fleet.length + can.astype(jnp.int32),
+        snap_dropped=fleet.snap_dropped | (tmask & ~can),
+    )
+
+
+def _batched_resolver(name: str):
+    fn = resolve_lib.get_table_resolver(name)
+
+    @jax.jit
+    def batched(fleet: ChainFleet, page_ids: jax.Array):
+        return jax.vmap(fn)(fleet.l2, fleet.length,
+                            page_ids.astype(jnp.int32))
+
+    return batched
+
+
+#: Batched resolvers: page_ids (T, B) → ResolveResult of (T, B) leaves.
+resolve_vanilla = _batched_resolver("vanilla")
+resolve_direct = _batched_resolver("direct")
+resolve_auto = _batched_resolver("auto")
+
+_RESOLVERS = {
+    "vanilla": resolve_vanilla,
+    "direct": resolve_direct,
+    "auto": resolve_auto,
+}
+
+
+def get_resolver(name: str):
+    return resolve_lib.lookup_resolver(_RESOLVERS, name)
+
+
+@partial(jax.jit, static_argnames=("method",))
+def read(fleet: ChainFleet, page_ids: jax.Array, *, method: str = "auto"):
+    """Batched whole-page read: (T, B) ids → ((T, B, page_size), result).
+
+    Unallocated or ZERO pages read as zeros, exactly as ``store.read``
+    (the gather is the same shared helper — the pool is global, so a
+    single gather serves the whole fleet).
+    """
+    from repro.core import store  # local import: store is the public API layer
+
+    res = get_resolver(method)(fleet, page_ids)
+    return store.gather_pages(fleet.pool, res), res
+
+
+def materialize(fleet: ChainFleet, *, method: str = "auto") -> jax.Array:
+    """Read every tenant's full virtual disk: (T, n_pages, page_size)."""
+    spec = fleet.spec
+    ids = jnp.broadcast_to(
+        jnp.arange(spec.n_pages, dtype=jnp.int32)[None, :],
+        (spec.n_tenants, spec.n_pages),
+    )
+    data, _ = read(fleet, ids, method=method)
+    return data
+
+
+# -- per-tenant views & host-side helpers ------------------------------------
+
+
+def tenant_chain(fleet: ChainFleet, t: int) -> Chain:
+    """A read-only single-``Chain`` view of tenant ``t``.
+
+    Shares the fleet's global pool, so resolvers and reads on the view
+    agree bit-for-bit with the batched fleet paths. Do **not** run any
+    mutating single-chain op (``write``, ``stream``, ``compact_pool``,
+    ``convert_to_scalable``) through the view: they allocate from a linear
+    cursor, not the fleet allocator's leases, and would corrupt other
+    tenants. The view's ``pool_cursor`` is pinned to ``pool_capacity`` so
+    an accidental ``write`` flags overflow immediately and ``stream``
+    raises rather than scribbling over foreign leases.
+    """
+    return Chain(
+        spec=fleet.spec.chain_spec(),
+        scalable=bool(fleet.scalable[t]),
+        l1=fleet.l1[t],
+        l2=fleet.l2[t],
+        pool=fleet.pool,
+        pool_cursor=jnp.asarray(fleet.spec.pool_capacity, jnp.int32),
+        length=fleet.length[t],
+        overflow=fleet.overflow[t],
+        snap_dropped=fleet.snap_dropped[t],
+    )
+
+
+def check_pool_capacity(fleet: ChainFleet) -> None:
+    """Raise if any tenant hit a resource limit (host-side guard)."""
+    bad = np.flatnonzero(np.asarray(fleet.overflow))
+    if bad.size:
+        raise RuntimeError(
+            f"page pool exhausted for tenants {bad.tolist()}: grow "
+            "FleetSpec.pool_capacity or stream/compact their chains"
+        )
+    capped = np.flatnonzero(np.asarray(fleet.snap_dropped))
+    if capped.size:
+        raise RuntimeError(
+            f"snapshot dropped for tenants {capped.tolist()}: their chains "
+            "are at max_chain; stream them to make room"
+        )
+
+
+def fleet_stats(fleet: ChainFleet) -> dict:
+    """Host-side occupancy summary (monitoring / benchmark reporting)."""
+    owner = np.asarray(fleet.lease_owner)
+    return dict(
+        n_tenants=fleet.spec.n_tenants,
+        quanta_total=fleet.spec.n_quanta,
+        quanta_leased=int(np.sum(owner >= 0)),
+        rows_allocated=int(np.sum(np.asarray(fleet.alloc_count))),
+        mean_chain_length=float(np.mean(np.asarray(fleet.length))),
+        overflowed_tenants=int(np.sum(np.asarray(fleet.overflow))),
+        snapshot_capped_tenants=int(np.sum(np.asarray(fleet.snap_dropped))),
+    )

@@ -18,6 +18,11 @@ the latest version of each page, and at which pool row does it live?*
 
 Both return identical ``(owner, ptr)`` on scalable chains — a property the
 test suite checks exhaustively (hypothesis) — because pool rows are global.
+
+The actual lookup math lives in the ``*_tables`` helpers, which operate on
+bare ``(C, n_pages, 2)`` L2 arrays plus a chain length. The single-chain
+entry points are thin wrappers; ``core.fleet`` vmaps the same helpers over
+a stacked tenant axis, so one implementation serves both scales.
 """
 
 from __future__ import annotations
@@ -39,15 +44,18 @@ class ResolveResult(NamedTuple):
     lookups: jax.Array  # (B,) int32 — #L2 consultations performed (cost)
 
 
-@jax.jit
-def resolve_vanilla(chain: Chain, page_ids: jax.Array) -> ResolveResult:
-    """First-hit scan from the active volume down the chain. O(chain)."""
-    spec = chain.spec
+def resolve_vanilla_tables(l2: jax.Array, length: jax.Array,
+                           page_ids: jax.Array) -> ResolveResult:
+    """First-hit scan from the active volume down the chain. O(chain).
+
+    ``l2``: (C, n_pages, 2) uint32; ``length``: () int32; ``page_ids``: (B,).
+    """
+    max_chain = l2.shape[0]
     page_ids = page_ids.astype(jnp.int32)
-    entries = chain.l2[:, page_ids]                       # (C, B, 2)
-    live = jnp.arange(spec.max_chain, dtype=jnp.int32)[:, None] < chain.length
+    entries = l2[:, page_ids]                             # (C, B, 2)
+    live = jnp.arange(max_chain, dtype=jnp.int32)[:, None] < length
     alloc = fmt.entry_allocated(entries) & live           # (C, B)
-    idx = jnp.arange(spec.max_chain, dtype=jnp.int32)[:, None]
+    idx = jnp.arange(max_chain, dtype=jnp.int32)[:, None]
     owner = jnp.max(jnp.where(alloc, idx, -1), axis=0)    # (B,)
     found = owner >= 0
     picked = jnp.take_along_axis(
@@ -55,7 +63,7 @@ def resolve_vanilla(chain: Chain, page_ids: jax.Array) -> ResolveResult:
     )[0]                                                   # (B, 2)
     # Walk cost: active volume down to the owner (inclusive); a miss walks
     # the entire chain.
-    lookups = jnp.where(found, chain.length - owner, chain.length)
+    lookups = jnp.where(found, length - owner, length)
     return ResolveResult(
         owner=owner,
         ptr=fmt.entry_ptr(picked),
@@ -65,12 +73,12 @@ def resolve_vanilla(chain: Chain, page_ids: jax.Array) -> ResolveResult:
     )
 
 
-@jax.jit
-def resolve_direct(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+def resolve_direct_tables(l2: jax.Array, length: jax.Array,
+                          page_ids: jax.Array) -> ResolveResult:
     """Single active-volume lookup using backing_file_index. O(1)."""
     page_ids = page_ids.astype(jnp.int32)
-    active = chain.length - 1
-    entries = jax.lax.dynamic_index_in_dim(chain.l2, active, 0, keepdims=False)[page_ids]
+    active = length - 1
+    entries = jax.lax.dynamic_index_in_dim(l2, active, 0, keepdims=False)[page_ids]
     alloc = fmt.entry_allocated(entries)
     valid = fmt.entry_bfi_valid(entries)
     owner = jnp.where(alloc, fmt.entry_bfi(entries).astype(jnp.int32), -1)
@@ -83,17 +91,17 @@ def resolve_direct(chain: Chain, page_ids: jax.Array) -> ResolveResult:
     )
 
 
-@jax.jit
-def resolve_auto(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+def resolve_auto_tables(l2: jax.Array, length: jax.Array,
+                        page_ids: jax.Array) -> ResolveResult:
     """Direct access where BFI_VALID, chain walk otherwise.
 
     This is what the sQEMU driver actually does on mixed images (paper
     §5.1 backward compatibility): pages written by a vanilla tool lack the
     extension bits and are resolved by walking; scalable pages are O(1).
     """
-    direct = resolve_direct(chain, page_ids)
-    active = chain.length - 1
-    entries = jax.lax.dynamic_index_in_dim(chain.l2, active, 0, keepdims=False)[
+    direct = resolve_direct_tables(l2, length, page_ids)
+    active = length - 1
+    entries = jax.lax.dynamic_index_in_dim(l2, active, 0, keepdims=False)[
         page_ids.astype(jnp.int32)
     ]
     # Trust the direct path iff the active entry is either scalable-valid
@@ -101,7 +109,7 @@ def resolve_auto(chain: Chain, page_ids: jax.Array) -> ResolveResult:
     # (allocated-without-bfi, or an empty active volume after a vanilla
     # snapshot) must walk.
     trust = fmt.entry_bfi_valid(entries) & fmt.entry_allocated(entries)
-    walk = resolve_vanilla(chain, page_ids)
+    walk = resolve_vanilla_tables(l2, length, page_ids)
     pick = lambda d, w: jnp.where(trust, d, w)
     return ResolveResult(
         owner=pick(direct.owner, walk.owner),
@@ -112,6 +120,28 @@ def resolve_auto(chain: Chain, page_ids: jax.Array) -> ResolveResult:
     )
 
 
+_TABLE_RESOLVERS = {
+    "vanilla": resolve_vanilla_tables,
+    "direct": resolve_direct_tables,
+    "auto": resolve_auto_tables,
+}
+
+
+@jax.jit
+def resolve_vanilla(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+    return resolve_vanilla_tables(chain.l2, chain.length, page_ids)
+
+
+@jax.jit
+def resolve_direct(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+    return resolve_direct_tables(chain.l2, chain.length, page_ids)
+
+
+@jax.jit
+def resolve_auto(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+    return resolve_auto_tables(chain.l2, chain.length, page_ids)
+
+
 _RESOLVERS = {
     "vanilla": resolve_vanilla,
     "direct": resolve_direct,
@@ -119,10 +149,20 @@ _RESOLVERS = {
 }
 
 
-def get_resolver(name: str):
+def lookup_resolver(registry: dict, name: str):
+    """Shared registry lookup (chain-, table- and fleet-level registries)."""
     try:
-        return _RESOLVERS[name]
+        return registry[name]
     except KeyError:
         raise ValueError(
-            f"unknown resolver {name!r}; expected one of {sorted(_RESOLVERS)}"
+            f"unknown resolver {name!r}; expected one of {sorted(registry)}"
         ) from None
+
+
+def get_resolver(name: str):
+    return lookup_resolver(_RESOLVERS, name)
+
+
+def get_table_resolver(name: str):
+    """Table-level resolver (used by ``core.fleet`` under vmap)."""
+    return lookup_resolver(_TABLE_RESOLVERS, name)

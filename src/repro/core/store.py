@@ -15,7 +15,6 @@ This is the substrate both integrations build on:
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -26,6 +25,19 @@ from repro.core import resolve as resolve_lib
 from repro.core.chain import Chain, ChainSpec
 
 
+def gather_pages(pool: jax.Array, res: resolve_lib.ResolveResult) -> jax.Array:
+    """Gather resolved pages from a pool; unallocated/ZERO read as zeros.
+
+    Shape-polymorphic over leading batch axes: serves both the single-chain
+    ``read`` ((B,) results) and the fleet's batched read ((T, B) results —
+    the pool is global, so one gather covers every tenant).
+    """
+    rows = jnp.where(res.found & ~res.zero, res.ptr, 0).astype(jnp.int32)
+    data = pool[rows]
+    ok = (res.found & ~res.zero)[..., None]
+    return jnp.where(ok, data, jnp.zeros_like(data))
+
+
 @partial(jax.jit, static_argnames=("method",))
 def read(chain: Chain, page_ids: jax.Array, *, method: str = "auto"):
     """Read whole pages. Unallocated or ZERO pages read as zeros.
@@ -33,10 +45,7 @@ def read(chain: Chain, page_ids: jax.Array, *, method: str = "auto"):
     Returns ``(data (B, page_size), ResolveResult)``.
     """
     res = resolve_lib.get_resolver(method)(chain, page_ids)
-    rows = jnp.where(res.found & ~res.zero, res.ptr, 0).astype(jnp.int32)
-    data = chain.pool[rows]
-    ok = (res.found & ~res.zero)[:, None]
-    return jnp.where(ok, data, jnp.zeros_like(data)), res
+    return gather_pages(chain.pool, res), res
 
 
 write = chain_lib.write
@@ -90,8 +99,14 @@ def materialize(chain: Chain, *, method: str = "auto") -> jax.Array:
 
 
 def check_pool_capacity(chain: Chain) -> None:
-    """Raise if any write overflowed the pool (host-side guard)."""
+    """Raise if the chain hit a resource limit (host-side guard)."""
     if bool(chain.overflow):
         raise RuntimeError(
-            "page pool overflow: grow ChainSpec.pool_capacity or stream the chain"
+            "page pool overflow: grow ChainSpec.pool_capacity or stream "
+            "the chain"
+        )
+    if bool(chain.snap_dropped):
+        raise RuntimeError(
+            "snapshot dropped: the chain is at max_chain; stream() to "
+            "shorten it (this also clears the flag)"
         )

@@ -14,7 +14,6 @@ there would sit on the critical path of the matmuls).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

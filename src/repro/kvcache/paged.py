@@ -57,6 +57,7 @@ class PagedKVCache:
         self.pool_v = jnp.zeros(shape, cfg.dtype)
         self._free = list(range(cfg.n_blocks - 1, -1, -1))
         self._ref = np.zeros(cfg.n_blocks, np.int32)
+        self._reserved: set[int] = set()
         self._seqs: dict[int, _Seq] = {}
         self._next_sid = 0
         self.lookup_count = 0  # fork-chain index consultations (Fig 13 analogue)
@@ -134,13 +135,65 @@ class PagedKVCache:
         table, _, _ = self._resolve(sid)
         return jnp.asarray(table, jnp.int32)
 
+    def batched_tables(self, sids, *, pad_to: int = 0,
+                       pad_block: int | None = None):
+        """Fleet-style table materialization: resolve every sequence and ship
+        ONE stacked (N, max_blocks) table + (N,) lengths to the device.
+
+        The per-sid ``block_table`` path costs one host→device transfer per
+        sequence per step; at fleet batch sizes that dominates the decode
+        step. Rows beyond ``len(sids)`` (up to ``pad_to``) are filled with
+        ``pad_block`` and length 0 so callers can keep a fixed batch shape
+        across steps (no re-jit when the active set changes).
+
+        ``pad_block`` MUST be a block taken out of circulation via
+        ``reserve_block()``: the decode step's in-step scatter writes one
+        K/V slot per row, padded rows included, and any live block used as
+        filler would be silently corrupted.
+        """
+        n = max(len(sids), pad_to)
+        if n > len(sids) and pad_block is None:
+            raise ValueError(
+                "padding rows need an explicit pad_block reserved via "
+                "reserve_block(); a default of 0 would alias a live block"
+            )
+        if pad_block is not None and pad_block not in self._reserved:
+            raise ValueError(
+                f"pad_block {pad_block} was not reserved via reserve_block(); "
+                "the decode step would scribble K/V into a live block"
+            )
+        # without a reserved scratch block, -1 holes stay -1 (the legacy
+        # block_table contract): rewriting them to any real block id would
+        # alias it for the decode step's in-step K/V scatter
+        fill = -1 if pad_block is None else pad_block
+        tables = np.full((n, self.cfg.max_blocks_per_seq), fill, np.int32)
+        lengths = np.zeros(n, np.int32)
+        for i, sid in enumerate(sids):
+            table, _, _ = self._resolve(sid)
+            tables[i] = np.where(table >= 0, table, fill)
+            lengths[i] = self._seqs[sid].length
+        return jnp.asarray(tables), jnp.asarray(lengths)
+
+    def reserve_block(self) -> int:
+        """Permanently take one pool block out of circulation (e.g. as a
+        scratch target for padded batch rows). Returns the block id.
+        Reserved blocks are excluded from ``blocks_in_use`` — they hold no
+        sequence data."""
+        b = self._pop_free()
+        self._reserved.add(b)
+        return b
+
     # -- writes ----------------------------------------------------------------
 
-    def _alloc(self, seq: _Seq) -> int:
+    def _pop_free(self) -> int:
         if not self._free:
             raise RuntimeError("KV pool exhausted")
         b = self._free.pop()
         self._ref[b] = 1
+        return b
+
+    def _alloc(self, seq: _Seq) -> int:
+        b = self._pop_free()
         seq.refs.add(b)
         return b
 
@@ -201,4 +254,5 @@ class PagedKVCache:
         return self._seqs[sid].length
 
     def blocks_in_use(self) -> int:
-        return int(np.sum(self._ref > 0))
+        """Blocks holding sequence data (reserved scratch blocks excluded)."""
+        return int(np.sum(self._ref > 0)) - len(self._reserved)

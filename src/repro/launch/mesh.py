@@ -6,13 +6,33 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions: ``axis_types`` (and the
+    ``AxisType`` enum itself) only exist on newer releases."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape, axes):
+    """``jax.sharding.AbstractMesh`` across JAX versions: 0.4.x takes one
+    ``((name, size), ...)`` tuple; newer releases take (shape, names)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4):
@@ -20,10 +40,7 @@ def make_host_mesh(data: int = 2, model: int = 4):
     n = len(jax.devices())
     data = min(data, max(1, n // model)) if n >= model else 1
     model = min(model, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) for the roofline terms.

@@ -12,7 +12,6 @@ dry-run's fake-device mode); --host uses whatever devices exist.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

@@ -163,7 +163,6 @@ def prefill(cfg: ModelConfig, params, tokens):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens):
-    b = tokens.shape[0]
     ae = cfg.attn_every
     g = _n_groups(cfg)
     pos = cache["pos"]

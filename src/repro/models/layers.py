@@ -12,7 +12,6 @@ accumulation are f32.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -261,7 +260,6 @@ def lm_loss(hidden, w_out, labels, *, s_chunk: int = 512, mask=None):
     Returns mean nll over unmasked positions (f32 scalar).
     """
     b, s, d = hidden.shape
-    v = w_out.shape[1]
     if mask is None:
         mask = jnp.ones((b, s), bool)
     n_chunks = max(1, (s + s_chunk - 1) // s_chunk)

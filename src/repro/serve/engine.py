@@ -11,7 +11,6 @@ sequence through ``paged_decode_step``.
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +42,9 @@ class Engine:
             scalable=scalable,
         )
         self.active: dict[int, list[int]] = {}  # sid -> generated tokens
+        # Scratch block absorbing the in-step pool writes of padded batch
+        # rows, so a padded decode can never touch a live sequence's blocks.
+        self._pad_block = self.kv.reserve_block()
 
     def add_request(self, prompt_tokens: np.ndarray) -> int:
         """Prefill a prompt; returns the sequence id."""
@@ -70,21 +72,32 @@ class Engine:
         self.kv.append(sid, k, k)
         self.kv._seqs[sid].length = length
 
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two: the decode step is compiled once per bucket,
+        not once per active-set size (fleet batching, no per-chain re-jit)."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
     def step(self) -> dict[int, int]:
-        """Decode one token for every active sequence."""
+        """Decode one token for every active sequence — one fleet-batched
+        device dispatch: stacked block tables, padded to a size bucket."""
         sids = sorted(self.active)
         if not sids:
             return {}
         for sid in sids:
             self._cow_prepare(sid)
-        tables = jnp.stack([self.kv.block_table(s) for s in sids])
-        lengths = jnp.asarray([self.kv.seq_length(s) for s in sids], jnp.int32)
-        tokens = jnp.asarray(
-            [[self.active[s][-1]] for s in sids], jnp.int32
+        pad_to = self._bucket(len(sids))
+        tables, lengths = self.kv.batched_tables(
+            sids, pad_to=pad_to, pad_block=self._pad_block
         )
+        tok_col = np.zeros((pad_to, 1), np.int32)
+        tok_col[: len(sids), 0] = [self.active[s][-1] for s in sids]
         logits, pk, pv = paged_decode_step(
             self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
-            tables, lengths, tokens,
+            tables, lengths, jnp.asarray(tok_col),
         )
         self.kv.pool_k, self.kv.pool_v = pk, pv
         out = {}

@@ -1,0 +1,22 @@
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run slow-marked tests too (full suite)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip slow tests by default, but never override an explicit choice:
+    a -m marker expression, --runslow, or selection by node id all run
+    exactly what was asked for."""
+    if config.option.markexpr or config.getoption("--runslow"):
+        return
+    if any("::" in a for a in config.args):
+        return
+    skip = pytest.mark.skip(
+        reason="slow: pass --runslow (or -m slow), or select by node id"
+    )
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

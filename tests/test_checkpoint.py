@@ -1,6 +1,5 @@
 """Incremental snapshot checkpointing: roundtrip, deltas, restart, reshard."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +117,7 @@ def test_elastic_reshard():
     np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(state["w"]))
 
 
+@pytest.mark.slow
 def test_trainer_crash_restart_resumes_identically():
     """End-to-end fault tolerance: crash, restore, bit-identical losses."""
     from repro.configs import smoke_config

@@ -147,12 +147,43 @@ def test_convert_to_scalable_enables_direct():
     )
 
 
+def test_snapshot_on_full_chain_caps_and_flags():
+    """Snapshotting a chain already at max_chain must not grow it (later
+    writes would scatter out of bounds and vanish) — it caps and flags."""
+    ch = make_store(max_chain=2)
+    ids = jnp.array([1], jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((1, 8)))
+    ch = store.snapshot(ch)
+    assert int(ch.length) == 2 and not bool(ch.snap_dropped)
+    ch = store.snapshot(ch)                    # chain is full
+    assert int(ch.length) == 2 and bool(ch.snap_dropped)
+    assert not bool(ch.overflow)               # pool flag is separate
+    ch = store.write(ch, ids, 2 * jnp.ones((1, 8)))
+    out, _ = store.read(ch, ids)
+    np.testing.assert_allclose(np.asarray(out), 2.0)   # write still lands
+    # a no-op stream (merge_upto=0 shortens nothing) keeps the flag latched;
+    # a real stream clears it
+    ch3 = make_store(max_chain=3)
+    ch3 = store.write(ch3, ids, jnp.ones((1, 8)))
+    ch3 = store.snapshot(store.snapshot(ch3))
+    ch3 = store.snapshot(ch3)                          # dropped
+    assert bool(ch3.snap_dropped)
+    assert bool(store.stream(ch3, 0).snap_dropped)     # still full
+    assert not bool(store.stream(ch3, 1).snap_dropped)  # room made
+
+
 def test_pool_overflow_flag():
     ch = store.create(n_pages=64, page_size=4, max_chain=4, pool_capacity=8)
     ids = jnp.arange(16, dtype=jnp.int32)
     ch = store.write(ch, ids, jnp.ones((16, 4)))
     with pytest.raises(RuntimeError):
         store.check_pool_capacity(ch)
+    # overflow rows are dropped, not clamped: the 8 landed pages keep their
+    # data and the excess pages read as unallocated (same contract as fleet)
+    out, res = store.read(ch, ids)
+    np.testing.assert_array_equal(np.asarray(res.found),
+                                  [True] * 8 + [False] * 8)
+    np.testing.assert_allclose(np.asarray(out[:8]), 1.0)
 
 
 def test_eq2_matches_paper_example():

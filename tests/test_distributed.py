@@ -8,14 +8,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as sh
 from repro.launch import hlo_analysis
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_abstract_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # AbstractMesh: rule resolution needs only axis names/sizes, so tests
     # exercise the production 16x16 geometry without 256 devices.
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_rules_divisibility_guard(mesh):
@@ -99,6 +99,7 @@ def test_compression_wire_bytes():
     assert comp.wire_bytes(tree, compressed=True) == 128 + 8
 
 
+@pytest.mark.slow
 def test_cache_sim_vanilla_grows_unified_flat():
     """The paper's core low-level claim, on the simulator (Fig 13)."""
     from repro.core import cache, store

@@ -1,0 +1,242 @@
+"""ChainFleet: batched multi-tenant ops ≡ a python loop over single chains.
+
+The fleet layer's contract is that, tenant by tenant, every batched
+operation (resolve_{vanilla,direct,auto}, write, snapshot, read) behaves
+exactly like the corresponding single-``Chain`` operation — including
+mixed scalable/vanilla fleets and pool-lease exhaustion. These tests
+mirror scripted (and, with hypothesis, random) op sequences onto both
+representations and compare them field-for-field. Pool row *pointers* are
+the one legitimate difference (shared leased pool vs private linear
+pools), so data equality is checked through reads, not ptrs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet, store
+
+METHODS = ("vanilla", "direct", "auto")
+N_PAGES, PAGE, MAXC = 64, 4, 8
+
+
+def make_fleet(n_tenants, scalable, *, pool_capacity=2048, lease_quantum=32,
+               max_chain=MAXC):
+    spec = fleet.FleetSpec(
+        n_tenants=n_tenants, n_pages=N_PAGES, page_size=PAGE,
+        max_chain=max_chain, pool_capacity=pool_capacity,
+        lease_quantum=lease_quantum, l2_per_table=32,
+    )
+    return fleet.create(spec, scalable=jnp.asarray(scalable, bool))
+
+
+def make_chains(scalable, *, pool_capacity=2048, max_chain=MAXC):
+    return [
+        store.create(n_pages=N_PAGES, page_size=PAGE, max_chain=max_chain,
+                     pool_capacity=pool_capacity, scalable=bool(s),
+                     l2_per_table=32)
+        for s in scalable
+    ]
+
+
+def apply_ops(ops, scalable):
+    """Run (kind, mask, seed) ops on a fleet and mirrored single chains."""
+    t = len(scalable)
+    fl = make_fleet(t, scalable)
+    chains = make_chains(scalable)
+    for kind, mask, seed in ops:
+        mask = np.asarray(mask, bool)
+        if kind == "write":
+            rng = np.random.default_rng(seed)
+            ids = np.stack([rng.choice(N_PAGES, 6, replace=False)
+                            for _ in range(t)]).astype(np.int32)
+            data = rng.standard_normal((t, 6, PAGE)).astype(np.float32)
+            fl = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data),
+                             jnp.asarray(mask))
+            for i in range(t):
+                if mask[i]:
+                    chains[i] = store.write(chains[i], jnp.asarray(ids[i]),
+                                            jnp.asarray(data[i]))
+        else:
+            # no length filter: both representations cap at max_chain and
+            # flag overflow, so the mirror stays exact even past the cap
+            fl = fleet.snapshot(fl, jnp.asarray(mask))
+            for i in range(t):
+                if mask[i]:
+                    chains[i] = store.snapshot(chains[i])
+    return fl, chains
+
+
+def assert_equivalent(fl, chains):
+    t = len(chains)
+    np.testing.assert_array_equal(
+        np.asarray(fl.length), [int(c.length) for c in chains])
+    ids = jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None],
+                           (t, N_PAGES))
+    for method in METHODS:
+        fr = fleet.get_resolver(method)(fl, ids)
+        fdata, _ = fleet.read(fl, ids, method=method)
+        for i, ch in enumerate(chains):
+            cdata, cr = store.read(ch, jnp.arange(N_PAGES, dtype=jnp.int32),
+                                   method=method)
+            for field in ("owner", "found", "zero", "lookups"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(fr, field)[i]),
+                    np.asarray(getattr(cr, field)),
+                    err_msg=f"{method} tenant {i} field {field}",
+                )
+            np.testing.assert_allclose(
+                np.asarray(fdata[i]), np.asarray(cdata), rtol=1e-6,
+                err_msg=f"{method} tenant {i} data",
+            )
+
+
+def test_scripted_mixed_fleet_equals_loop():
+    """Masked writes/snapshots on a mixed scalable/vanilla fleet."""
+    scalable = [True, False, True, False, True]
+    ops = [
+        ("write", [1, 1, 1, 1, 1], 0),
+        ("snapshot", [1, 1, 0, 1, 1], None),
+        ("write", [1, 0, 1, 1, 0], 1),
+        ("snapshot", [0, 1, 1, 0, 1], None),
+        ("write", [1, 1, 0, 0, 1], 2),
+        ("snapshot", [1, 1, 1, 1, 1], None),
+        ("write", [1, 1, 1, 1, 1], 3),
+    ]
+    fl, chains = apply_ops(ops, scalable)
+    assert_equivalent(fl, chains)
+    assert not bool(jnp.any(fl.overflow))
+
+
+def test_vanilla_tenants_walk_scalable_go_direct():
+    """Fleet-granularity Eq. 1: per-tenant lookup cost depends on the
+    tenant's own format, within one batched resolve."""
+    scalable = [True, False]
+    ops = [("write", [1, 1], 0)] + [("snapshot", [1, 1], None)] * 4
+    fl, chains = apply_ops(ops, scalable)
+    ids = jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None], (2, N_PAGES))
+    res = fleet.resolve_auto(fl, ids)
+    found = np.asarray(res.found)
+    lookups = np.asarray(res.lookups)
+    assert np.all(lookups[0][found[0]] == 1)        # scalable: O(1)
+    assert np.all(lookups[1][found[1]] == 5)        # vanilla: walks 5 layers
+    assert_equivalent(fl, chains)
+
+
+def test_lease_exhaustion_isolated_per_tenant():
+    """A tenant running the shared pool dry flags only itself; other
+    tenants' leases and data are untouched and stay equivalent."""
+    fl = make_fleet(3, [True, True, True], pool_capacity=32, lease_quantum=8)
+    ids = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (3, 8))
+    fl = fleet.write(fl, ids, jnp.full((3, 8, PAGE), 1.0))   # 3/4 quanta gone
+    fl = fleet.write(fl, ids, jnp.full((3, 8, PAGE), 2.0))   # only one fits
+    over = np.asarray(fl.overflow)
+    assert over.sum() == 2                     # exactly one tenant won round 2
+    winner = int(np.flatnonzero(~over)[0])
+    data = np.asarray(fleet.materialize(fl))
+    assert np.all(data[winner, :8] == 2.0)
+    for t in range(3):
+        if t != winner:
+            # losers keep their round-1 data; dropped writes corrupt nothing
+            assert np.all(data[t, :8] == 1.0)
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        fleet.check_pool_capacity(fl)
+    # every quantum is leased, and the winner holds exactly two of them
+    owner = np.asarray(fl.lease_owner)
+    assert (owner >= 0).all()
+    assert (owner == winner).sum() == 2
+    assert np.asarray(fl.alloc_count)[winner] == 16
+
+
+def test_single_tenant_fills_entire_pool_then_drops():
+    """A tenant leasing every quantum (including the final lease-list slot)
+    keeps all its data; writes past pool capacity are dropped — never
+    aliased onto the final quantum's immutable rows — and flag overflow."""
+    fl = make_fleet(1, [True], pool_capacity=32, lease_quantum=8)
+    ids = jnp.arange(8, dtype=jnp.int32)[None]
+    for i in range(4):                       # exactly fills all 4 quanta
+        fl = fleet.write(fl, ids + 8 * i, jnp.full((1, 8, PAGE), float(i + 1)))
+    assert not bool(fl.overflow[0])
+    assert int(fl.alloc_count[0]) == 32
+    assert np.asarray(fl.lease_index[0]).min() >= 0   # last slot stitched
+    data = np.asarray(fleet.materialize(fl))[0]
+    for i in range(4):
+        assert np.all(data[8 * i:8 * (i + 1)] == i + 1)
+    fl = fleet.write(fl, ids, jnp.full((1, 8, PAGE), 99.0))  # pool is full
+    assert bool(fl.overflow[0])
+    assert int(fl.alloc_count[0]) == 32
+    after = np.asarray(fleet.materialize(fl))[0]
+    np.testing.assert_array_equal(after, data)        # nothing corrupted
+
+
+def test_one_batch_wanting_more_quanta_than_pool_flags_overflow():
+    """A single write batch needing more quanta than the pool holds must
+    still set overflow (the wanted-lease count can exceed n_quanta)."""
+    fl = make_fleet(1, [True], pool_capacity=32, lease_quantum=8)
+    ids = jnp.arange(33, dtype=jnp.int32)[None]          # wants 5 of 4 quanta
+    fl = fleet.write(fl, ids, jnp.ones((1, 33, PAGE)))
+    assert bool(fl.overflow[0])
+    assert int(fl.alloc_count[0]) == 32                  # 32 rows landed
+    data = np.asarray(fleet.materialize(fl))[0]
+    assert np.all(data[:32] == 1.0) and np.all(data[32] == 0.0)
+
+
+def test_l1_presence_bit_survives_mid_batch_exhaustion():
+    """A valid and a dropped page sharing one L2 table: the table's L1
+    presence bit must end up set regardless of scatter order."""
+    fl = make_fleet(1, [True], pool_capacity=8, lease_quantum=8)
+    ids = jnp.arange(12, dtype=jnp.int32)[None]          # all in L2 table 0
+    fl = fleet.write(fl, ids, jnp.ones((1, 12, PAGE)))
+    assert bool(fl.overflow[0])
+    assert int(fl.l1[0, 0, 0]) == 1                      # bit set by valid rows
+    res = fleet.resolve_direct(fl, ids)
+    assert np.asarray(res.found[0]).tolist() == [True] * 8 + [False] * 4
+
+
+def test_snapshot_mask_and_chain_cap():
+    fl = make_fleet(2, [True, True], max_chain=3)
+    ids = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32)[None], (2, 4))
+    fl = fleet.write(fl, ids, jnp.ones((2, 4, PAGE)))
+    fl = fleet.snapshot(fl, jnp.asarray([True, False]))
+    assert np.asarray(fl.length).tolist() == [2, 1]
+    fl = fleet.snapshot(fl)                       # both advance
+    assert np.asarray(fl.length).tolist() == [3, 2]
+    fl = fleet.snapshot(fl)                       # tenant 0 at max_chain
+    assert np.asarray(fl.length).tolist() == [3, 3]
+    assert np.asarray(fl.snap_dropped).tolist() == [True, False]
+    assert not np.asarray(fl.overflow).any()      # pool flag is separate
+
+
+def test_tenant_chain_view_matches_batched_paths():
+    ops = [("write", [1, 1, 1], 0), ("snapshot", [1, 1, 1], None),
+           ("write", [1, 1, 1], 1)]
+    fl, _ = apply_ops(ops, [True, False, True])
+    full = np.asarray(fleet.materialize(fl))
+    for t in range(3):
+        view = fleet.tenant_chain(fl, t)
+        np.testing.assert_allclose(
+            np.asarray(store.materialize(view)), full[t], rtol=1e-6)
+
+
+def test_fleet_property_random_ops():
+    """Hypothesis: arbitrary masked write/snapshot interleavings over a
+    mixed fleet keep fleet ≡ looped single chains for all resolvers."""
+    pytest.importorskip("hypothesis",
+                        reason="install extras: pip install -e .[test]")
+    from hypothesis import given, settings, strategies as st
+
+    n_t = 4
+    op = st.tuples(
+        st.sampled_from(["write", "snapshot"]),
+        st.lists(st.booleans(), min_size=n_t, max_size=n_t),
+        st.integers(0, 2**31 - 1),
+    )
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.lists(op, min_size=1, max_size=8),
+           st.lists(st.booleans(), min_size=n_t, max_size=n_t))
+    def run(ops, scalable):
+        fl, chains = apply_ops(ops, scalable)
+        assert_equivalent(fl, chains)
+
+    run()

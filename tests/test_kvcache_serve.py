@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.kvcache.paged import PagedKVCache, PagedKVConfig
-from repro.models import get_model, make_batch
+from repro.models import get_model
 
 KEY = jax.random.PRNGKey(0)
 KV = PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=8, block_size=4,
@@ -100,6 +100,39 @@ def test_engine_forked_generation_matches_unforked():
     assert [o[a] for o in outs] == [o[c] for o in outs2]
 
 
+def test_engine_padded_batch_matches_reference():
+    """3 active sequences pad to a bucket of 4: the padded decode row
+    (scratch pad_block, length 0) must not perturb live sequences."""
+    cfg = smoke_config("qwen2-7b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    from repro.serve.engine import Engine
+
+    prompt = np.asarray(jax.random.randint(KEY, (9,), 0, cfg.vocab_size))
+    eng = Engine(cfg, params, scalable=True, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16)
+    a = eng.add_request(prompt)
+    b = eng.fork_request(a)
+    c = eng.fork_request(a)
+    outs = [eng.step() for _ in range(3)]
+    for o in outs:                      # identical prefixes, greedy decode
+        assert o[a] == o[b] == o[c]
+
+    eng2 = Engine(cfg, params, scalable=True, n_blocks=64, block_size=4,
+                  max_blocks_per_seq=16)
+    d = eng2.add_request(prompt)
+    outs2 = [eng2.step() for _ in range(3)]
+    assert [o[a] for o in outs] == [o[d] for o in outs2]
+
+    # padding without a reserved scratch block must be refused, and so
+    # must a pad_block that was never actually reserved
+    with pytest.raises(ValueError, match="pad_block"):
+        eng.kv.batched_tables([a], pad_to=2)
+    live_block = int(eng.kv._seqs[a].table[0])   # owned by sequence a
+    with pytest.raises(ValueError, match="not reserved"):
+        eng.kv.batched_tables([a], pad_to=2, pad_block=live_block)
+
+
 def test_engine_matches_dense_decode_path():
     """Paged serving must agree with the dense-cache decode_step."""
     cfg = smoke_config("qwen2-7b")
@@ -135,6 +168,8 @@ def test_engine_matches_dense_decode_path():
 def test_kvcache_property_random_ops():
     """Property test: random fork/append interleavings vs a python reference
     model, for both fork strategies."""
+    pytest.importorskip("hypothesis",
+                        reason="install extras: pip install -e .[test]")
     from hypothesis import given, settings, strategies as st
 
     @settings(deadline=None, max_examples=15)
