@@ -1,7 +1,8 @@
-"""Shared benchmark helpers: timing, chain builders, CSV emission."""
+"""Shared benchmark helpers: timing, chain builders, CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -49,3 +50,13 @@ def build_chain(length: int, *, scalable: bool, n_pages: int = 2048,
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def emit_json(path: str, benchmark: str, results: list[dict],
+              **meta) -> None:
+    """Write a ``BENCH_*.json`` artifact (the CI-accumulated perf trail)."""
+    payload = dict(benchmark=benchmark, results=results, **meta)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(results)} records)")

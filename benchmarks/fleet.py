@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.common import emit, time_fn
+    from benchmarks.common import emit, emit_json, time_fn
 except ModuleNotFoundError:  # invoked as `python benchmarks/fleet.py`
     import pathlib
     import sys
@@ -34,7 +34,7 @@ except ModuleNotFoundError:  # invoked as `python benchmarks/fleet.py`
     _root = pathlib.Path(__file__).resolve().parent.parent
     sys.path.insert(0, str(_root))
     sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
-    from benchmarks.common import emit, time_fn
+    from benchmarks.common import emit, emit_json, time_fn
 from repro.core import fleet as fleet_lib
 from repro.core import resolve as resolve_lib
 from repro.core import store
@@ -153,15 +153,19 @@ def main(argv=None) -> int:
     p.add_argument("--iters", type=int, default=9,
                    help="timing iterations per cell (median reported)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default="",
+                   help="also write a BENCH_fleet.json artifact here")
     args = p.parse_args(argv)
 
     ok = True
+    results = []
     for method in args.methods:
         for t in args.tenants:
             for c in args.chain_lengths:
                 r = bench_cell(t, c, batch=args.batch, method=method,
                                seed=args.seed, verify=not args.no_verify,
                                iters=args.iters)
+                results.append(r)
                 emit(
                     f"fleet_{method}_t{t}_c{c}", r["fleet_us"],
                     f"loop_us={r['loop_us']:.0f};speedup={r['speedup']:.1f}x;"
@@ -172,6 +176,8 @@ def main(argv=None) -> int:
                     ok = False
                     print(f"WARNING: speedup {r['speedup']:.1f}x < 5x "
                           f"at {t} tenants ({method}, chain {c})")
+    if args.json:
+        emit_json(args.json, "fleet", results, batch=args.batch)
     return 0 if ok else 1
 
 

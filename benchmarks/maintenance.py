@@ -1,0 +1,195 @@
+"""Maintenance-plane benchmark: stop-the-world vs amortized streaming.
+
+Paper §6.4 observes a ~100x guest-latency hit while a chain is being
+streamed: maintenance inside the serving path stalls the guest. This
+scenario reproduces that cliff at fleet granularity and measures what the
+``MaintenanceScheduler`` buys back. For each tenants × chain-length cell
+we run a fixed number of serving *ticks* (one batched fleet resolve per
+tick, the decode-step analogue) under two maintenance regimes:
+
+* ``stw``       — stop-the-world: one tick streams and compacts EVERY
+  tenant before serving (the naive background job);
+* ``amortized`` — a ``MaintenanceScheduler`` streams at most K tenants
+  per tick until the backlog drains.
+
+Both end in the same steady state (all chains streamed, quanta returned
+to the allocator free list); the difference is the worst-case per-tick
+latency the serving path observes, reported per cell along with the
+reclaimed-quanta count. Emits ``BENCH_maintenance.json``.
+
+Run: ``PYTHONPATH=src python benchmarks/maintenance.py --tenants 32 64``
+CI smoke: ``python benchmarks/maintenance.py --smoke``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import emit, emit_json
+except ModuleNotFoundError:  # invoked as `python benchmarks/maintenance.py`
+    import pathlib
+    import sys
+
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
+    from benchmarks.common import emit, emit_json
+from repro.core import fleet as fleet_lib
+from repro.core.scheduler import MaintenanceScheduler
+
+
+def build_fleet(n_tenants: int, chain_len: int, *, n_pages: int = 256,
+                page_size: int = 16, writes_per_layer: int = 24,
+                seed: int = 0) -> fleet_lib.ChainFleet:
+    """A fleet of ``n_tenants`` chains of length ``chain_len`` with COW
+    garbage: every layer overwrites a random page set, so streaming has
+    superseded rows to reclaim."""
+    lease_quantum = 32
+    rows_per_tenant = -(-chain_len * writes_per_layer
+                        // lease_quantum) * lease_quantum
+    spec = fleet_lib.FleetSpec(
+        n_tenants=n_tenants,
+        n_pages=n_pages,
+        page_size=page_size,
+        max_chain=chain_len + 1,
+        pool_capacity=rows_per_tenant * n_tenants,
+        lease_quantum=lease_quantum,
+    )
+    fl = fleet_lib.create(spec)
+    rng = np.random.default_rng(seed)
+    for layer in range(chain_len):
+        ids = np.stack([
+            rng.choice(n_pages, writes_per_layer, replace=False)
+            for _ in range(n_tenants)
+        ]).astype(np.int32)
+        data = rng.standard_normal(
+            (n_tenants, writes_per_layer, page_size)).astype(np.float32)
+        fl = fleet_lib.write(fl, jnp.asarray(ids), jnp.asarray(data))
+        if layer < chain_len - 1:
+            fl = fleet_lib.snapshot(fl)
+    fleet_lib.check_pool_capacity(fl)
+    return fl
+
+
+def run_ticks(fl, *, ticks: int, batch: int, seed: int,
+              maintain) -> tuple[list[float], fleet_lib.ChainFleet]:
+    """Per-tick wall latencies of ``maintain(state, tick) ; resolve``.
+
+    ``maintain`` mutates/returns the serving state; the resolve is the
+    in-band serving op whose latency the maintenance work perturbs.
+    """
+    rng = np.random.default_rng(seed)
+    resolver = fleet_lib.get_resolver("vanilla")
+    t = fl.spec.n_tenants
+
+    # warm the resolve jit outside the timed region (both regimes resolve
+    # the same (T, B) shape, so one warmup serves every tick)
+    ids = jnp.asarray(rng.integers(0, fl.spec.n_pages, (t, batch)), jnp.int32)
+    jax.block_until_ready(resolver(fl, ids))
+
+    state = fl
+    lat = []
+    for tick in range(ticks):
+        ids = jnp.asarray(
+            rng.integers(0, fl.spec.n_pages, (t, batch)), jnp.int32)
+        t0 = time.perf_counter()
+        state = maintain(state, tick)
+        jax.block_until_ready(resolver(state, ids))
+        lat.append(time.perf_counter() - t0)
+    return lat, state
+
+
+def bench_cell(n_tenants: int, chain_len: int, *, batch: int, ticks: int,
+               k: int, seed: int = 0) -> list[dict]:
+    fl = build_fleet(n_tenants, chain_len, seed=seed)
+    free0 = fleet_lib.fleet_stats(fl)["quanta_free"]
+    out = []
+
+    def stw(state, tick):
+        if tick == 0:   # the naive job: everything, in one serving tick
+            state = fleet_lib.stream_tenants(
+                state, True, np.asarray(state.length) - 2)
+        return state
+
+    def amortized(state, tick, sched_box=[None]):
+        if sched_box[0] is None:
+            sched_box[0] = MaintenanceScheduler(
+                state, max_tenants_per_tick=k, stream_chain_threshold=2)
+        sched = sched_box[0]
+        sched.fleet = state
+        sched.tick()    # a drained backlog ticks for (almost) free
+        return sched.fleet
+
+    for mode, maintain in (("stw", stw), ("amortized", amortized)):
+        lat, end = run_ticks(fl, ticks=ticks, batch=batch, seed=seed + 1,
+                             maintain=maintain)
+        reclaimed = fleet_lib.fleet_stats(end)["quanta_free"] - free0
+        rec = dict(
+            mode=mode,
+            tenants=n_tenants,
+            chain=chain_len,
+            k=(None if mode == "stw" else k),
+            ticks=ticks,
+            worst_tick_ms=max(lat) * 1e3,
+            mean_tick_ms=float(np.mean(lat)) * 1e3,
+            p50_tick_ms=float(np.median(lat)) * 1e3,
+            quanta_reclaimed=reclaimed,
+            final_mean_chain=float(np.mean(np.asarray(end.length))),
+        )
+        emit(
+            f"maint_{mode}_t{n_tenants}_c{chain_len}",
+            rec["worst_tick_ms"] * 1e3,
+            f"mean_ms={rec['mean_tick_ms']:.2f};"
+            f"reclaimed={reclaimed};chain={rec['final_mean_chain']:.1f}",
+        )
+        out.append(rec)
+    return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tenants", type=int, nargs="+", default=[32, 64])
+    p.add_argument("--chain-lengths", type=int, nargs="+", default=[8, 16])
+    p.add_argument("--batch", type=int, default=128,
+                   help="resolve batch per tenant per tick")
+    p.add_argument("--ticks", type=int, default=48,
+                   help="serving ticks per regime")
+    p.add_argument("--k", type=int, default=2,
+                   help="scheduler budget: tenants streamed per tick")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default="BENCH_maintenance.json",
+                   help="output artifact path ('' disables)")
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI configuration (still >= 32 tenants)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.tenants, args.chain_lengths = [32], [6]
+        args.batch, args.ticks = 64, 24
+
+    results, ok = [], True
+    for t in args.tenants:
+        for c in args.chain_lengths:
+            cell = bench_cell(t, c, batch=args.batch, ticks=args.ticks,
+                              k=args.k, seed=args.seed)
+            results.extend(cell)
+            by_mode = {r["mode"]: r for r in cell}
+            worst_stw = by_mode["stw"]["worst_tick_ms"]
+            worst_amo = by_mode["amortized"]["worst_tick_ms"]
+            if t >= 32 and not worst_amo < worst_stw:
+                ok = False
+                print(f"WARNING: amortized worst tick {worst_amo:.2f}ms not "
+                      f"below stop-the-world {worst_stw:.2f}ms at {t} tenants")
+    if args.json:
+        emit_json(args.json, "maintenance", results,
+                  k=args.k, batch=args.batch, ticks=args.ticks)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -240,63 +240,73 @@ def snapshot_cost_model(spec: ChainSpec) -> dict:
     )
 
 
-def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
-    """Compact layers ``[0, merge_upto]`` into a single base layer.
+def plan_merge(l2: jax.Array, merge_upto: int):
+    """Owner-resolve layers ``[0, merge_upto]`` of one table stack.
 
-    Host-side maintenance op (uses the concrete chain length; not jittable).
-    ``copy_data=True`` rewrites merged pages into fresh pool rows, modelling
-    the real streaming job's data movement (the source of the paper's
-    observed 100x guest-latency hit during streaming); ``False`` merges
-    metadata only (pool rows are immutable and global, so this is safe).
+    ``l2``: (C, n_pages, 2). Returns ``(merged (n_pages, 2), found
+    (n_pages,) bool)`` — per page, the entry of the topmost merged layer
+    that has it allocated. Table-level helper shared by ``stream`` and the
+    fleet's ``stream_tenants``.
     """
-    spec = chain.spec
-    length = int(chain.length)
-    if not (0 <= merge_upto < length - 1):
-        raise ValueError("can only merge strictly below the active volume")
-    k = merge_upto + 1  # number of layers merged into one
-
-    sub = chain.l2[:k]                                   # (k, n_pages, 2)
+    k = merge_upto + 1
+    sub = l2[:k]                                         # (k, n_pages, 2)
     alloc = fmt.entry_allocated(sub)                     # (k, n_pages)
     idx = jnp.arange(k, dtype=jnp.int32)[:, None]
     owner = jnp.max(jnp.where(alloc, idx, -1), axis=0)   # (n_pages,)
     found = owner >= 0
     safe_owner = jnp.maximum(owner, 0)
     merged = jnp.take_along_axis(sub, safe_owner[None, :, None], axis=0)[0]
+    return merged, found
 
-    ptr = fmt.entry_ptr(merged)
-    cursor = chain.pool_cursor
-    pool = chain.pool
-    if copy_data:
-        # Rewrite surviving merged pages to fresh rows (data movement).
-        n_live = int(jnp.sum(found))
-        live_pages = jnp.nonzero(found, size=spec.n_pages, fill_value=0)[0]
-        live = live_pages[:n_live]
-        src_rows = ptr[live].astype(jnp.int32)
-        dst_rows = int(cursor) + jnp.arange(n_live, dtype=jnp.int32)
-        if n_live and int(dst_rows[-1]) >= spec.pool_capacity:
-            raise RuntimeError("pool overflow during streaming")
-        pool = pool.at[dst_rows].set(pool[src_rows])
-        ptr = ptr.at[live].set(dst_rows.astype(jnp.uint32))
-        cursor = cursor + n_live
 
-    # Renumber: merged base takes bfi 0; upper layer s (> merge_upto)
-    # becomes s - merge_upto. Entries inside upper layers that point below
-    # the merge point collapse onto bfi 0.
+def merge_tables(l1: jax.Array, l2: jax.Array, length: int, merge_upto: int,
+                 *, scalable, ptr_override: jax.Array | None = None,
+                 plan=None):
+    """Merge layers ``[0, merge_upto]`` of one table stack into one base.
+
+    The table-level core of streaming, shared by ``stream`` and the
+    fleet's ``stream_tenants`` (same pattern as the ``*_tables``
+    resolvers, so chain and fleet semantics cannot drift).
+
+    ``l1``: (C, n_l1); ``l2``: (C, n_pages, 2); ``length`` is the concrete
+    chain length (host int — maintenance ops are not jitted).
+    ``ptr_override``: optional (n_pages,) replacement pool rows for merged
+    pages (the data-movement path); scalable upper-layer entries that
+    reference a merged owner are rewritten to match. ``plan``: an already
+    computed ``plan_merge(l2, merge_upto)`` result, so a caller that
+    needed the plan to build ``ptr_override`` does not pay the owner
+    scan twice.
+
+    Renumbering: the merged base takes bfi 0; upper layer ``s`` becomes
+    ``s - merge_upto``, and upper entries pointing below the merge point
+    collapse onto bfi 0. Returns ``(l1', l2', new_length)``.
+    """
+    max_chain, n_pages = l2.shape[0], l2.shape[1]
+    n_l1 = l1.shape[1]
+    k = merge_upto + 1
+    merged, found = plan_merge(l2, merge_upto) if plan is None else plan
+    ptr = (fmt.entry_ptr(merged) if ptr_override is None
+           else jnp.asarray(ptr_override, jnp.uint32))
+
     merged_entries = fmt.pack_entry(
-        ptr, jnp.zeros_like(ptr), allocated=found, bfi_valid=chain.scalable,
+        ptr, jnp.zeros_like(ptr), allocated=found, bfi_valid=scalable,
         zero=fmt.entry_zero(merged),
     )
 
     n_upper = length - k
-    upper_l2 = chain.l2[k:k + n_upper]
-    upper_l1 = chain.l1[k:k + n_upper]
+    upper_l2 = l2[k:k + n_upper]
+    upper_l1 = l1[k:k + n_upper]
     old_bfi = fmt.entry_bfi(upper_l2).astype(jnp.int32)
     new_bfi = jnp.maximum(old_bfi - merge_upto, 0)
     upper_alloc = fmt.entry_allocated(upper_l2)
     upper_ptr = fmt.entry_ptr(upper_l2)
-    if copy_data:
+    if ptr_override is not None:
         # Upper entries whose owner was merged must point at the new rows.
-        points_below = upper_alloc & (old_bfi <= merge_upto)
+        # Only bfi-valid entries reference an ancestor's row; a vanilla
+        # (bfi-invalid) allocated entry owns its page outright, and its
+        # bfi field of 0 must not be mistaken for "points below".
+        points_below = (upper_alloc & fmt.entry_bfi_valid(upper_l2)
+                        & (old_bfi <= merge_upto))
         upper_ptr = jnp.where(points_below, ptr[None, :], upper_ptr)
     upper_l2 = fmt.pack_entry(
         upper_ptr, new_bfi, allocated=upper_alloc,
@@ -305,13 +315,60 @@ def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
     )
 
     new_len = 1 + n_upper
-    l2 = fmt.empty_entries((spec.max_chain, spec.n_pages))
-    l2 = l2.at[0].set(merged_entries)
-    l2 = l2.at[1:1 + n_upper].set(upper_l2)
-    l1 = jnp.zeros((spec.max_chain, spec.n_l1), jnp.uint32)
-    merged_l1 = jnp.max(chain.l1[:k], axis=0)
-    l1 = l1.at[0].set(merged_l1)
-    l1 = l1.at[1:1 + n_upper].set(upper_l1)
+    out_l2 = fmt.empty_entries((max_chain, n_pages))
+    out_l2 = out_l2.at[0].set(merged_entries)
+    out_l2 = out_l2.at[1:1 + n_upper].set(upper_l2)
+    out_l1 = jnp.zeros((max_chain, n_l1), jnp.uint32)
+    out_l1 = out_l1.at[0].set(jnp.max(l1[:k], axis=0))
+    out_l1 = out_l1.at[1:1 + n_upper].set(upper_l1)
+    return out_l1, out_l2, new_len
+
+
+def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
+    """Compact layers ``[0, merge_upto]`` into a single base layer.
+
+    Host-side maintenance op (uses the concrete chain length; not jittable).
+    ``copy_data=True`` rewrites merged pages into fresh pool rows, modelling
+    the real streaming job's data movement (the source of the paper's
+    observed 100x guest-latency hit during streaming); ``False`` merges
+    metadata only (pool rows are immutable and global, so this is safe).
+
+    On pool exhaustion the copy is dropped and the merge degrades to
+    metadata-only, flagging ``overflow`` — the write path's contract — so
+    a background scheduler can skip, compact, and retry instead of
+    unwinding a mid-operation ``RuntimeError``. The chain stays consistent
+    either way.
+    """
+    spec = chain.spec
+    length = int(chain.length)
+    if not (0 <= merge_upto < length - 1):
+        raise ValueError("can only merge strictly below the active volume")
+
+    cursor = chain.pool_cursor
+    pool = chain.pool
+    overflow = chain.overflow
+    ptr_override = None
+    plan = None
+    if copy_data:
+        plan = merged, found = plan_merge(chain.l2, merge_upto)
+        ptr = fmt.entry_ptr(merged)
+        n_live = int(jnp.sum(found))
+        if int(cursor) + n_live > spec.pool_capacity:
+            overflow = jnp.ones((), bool)
+        elif n_live:
+            # Rewrite surviving merged pages to fresh rows (data movement).
+            live_pages = jnp.nonzero(found, size=spec.n_pages, fill_value=0)[0]
+            live = live_pages[:n_live]
+            src_rows = ptr[live].astype(jnp.int32)
+            dst_rows = int(cursor) + jnp.arange(n_live, dtype=jnp.int32)
+            pool = pool.at[dst_rows].set(pool[src_rows])
+            ptr_override = ptr.at[live].set(dst_rows.astype(jnp.uint32))
+            cursor = cursor + n_live
+
+    l1, l2, new_len = merge_tables(
+        chain.l1, chain.l2, length, merge_upto,
+        scalable=chain.scalable, ptr_override=ptr_override, plan=plan,
+    )
     # the dropped-snapshot flag is resolved only if streaming actually made
     # room (merge_upto=0 merges layer 0 into itself and shortens nothing)
     return dataclasses.replace(
@@ -321,6 +378,7 @@ def stream(chain: Chain, merge_upto: int, *, copy_data: bool = True) -> Chain:
         pool=pool,
         pool_cursor=jnp.asarray(cursor, jnp.int32),
         length=jnp.asarray(new_len, jnp.int32),
+        overflow=overflow,
         snap_dropped=chain.snap_dropped & (new_len >= spec.max_chain),
     )
 

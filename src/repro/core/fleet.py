@@ -355,6 +355,162 @@ def materialize(fleet: ChainFleet, *, method: str = "auto") -> jax.Array:
     return data
 
 
+# -- maintenance plane: streaming, GC, lease reclamation ---------------------
+
+
+def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
+    """Repack each selected tenant's live rows into its leading lease
+    quanta and return now-empty quanta to the allocator free list.
+
+    Host-side (like ``chain.compact_pool``). Per selected tenant: gather
+    the pool rows its live L2 entries reference, copy them — the streaming
+    job's data movement — into the densest prefix of its leased quanta,
+    remap the L2 pointers, then release every quantum past the packed
+    prefix (``lease_owner`` → -1, ``lease_index``/``lease_count``/
+    ``alloc_count`` shrink). ``overflow`` clears only for tenants whose
+    row count actually shrank — reclaiming zero rows leaves the tenant as
+    wedged as before, and clearing the flag would hide that.
+    """
+    spec = fleet.spec
+    q = spec.lease_quantum
+    lease_owner = np.asarray(fleet.lease_owner).copy()
+    lease_index = np.asarray(fleet.lease_index).copy()
+    lease_count = np.asarray(fleet.lease_count).copy()
+    alloc_count = np.asarray(fleet.alloc_count).copy()
+    lengths = np.asarray(fleet.length)
+    reclaimed = np.zeros(spec.n_tenants, np.int64)
+    pool = fleet.pool
+    l2 = fleet.l2
+
+    for t in np.flatnonzero(sel):
+        length_t = int(lengths[t])
+        entries = l2[t, :length_t]                    # (L, n_pages, 2)
+        alloc = np.asarray(fmt.entry_allocated(entries))
+        # ZERO clusters are allocated but their ptr is never dereferenced —
+        # they pin no pool row
+        live = alloc & ~np.asarray(fmt.entry_zero(entries))
+        rows = np.asarray(fmt.entry_ptr(entries))
+        used = np.unique(rows[live]).astype(np.int64)  # sorted global rows
+        n_live = len(used)
+        if n_live and not np.all(lease_owner[used // q] == t):
+            raise RuntimeError(
+                f"tenant {t} references pool rows outside its leased "
+                "quanta: fleet state is corrupt"
+            )
+        n_keep = -(-n_live // q)
+        if n_live:
+            keep = lease_index[t, :n_keep]
+            i = np.arange(n_live)
+            new_rows = keep[i // q] * q + i % q
+            # gather-then-scatter: values materialize before the write, so
+            # overlapping old/new rows inside the kept quanta are safe
+            vals = pool[jnp.asarray(used, jnp.int32)]
+            pool = pool.at[jnp.asarray(new_rows, jnp.int32)].set(vals)
+            lut = np.zeros(spec.pool_capacity, np.uint32)
+            lut[used] = new_rows.astype(np.uint32)
+            new_entries = fmt.pack_entry(
+                jnp.asarray(lut[rows], jnp.uint32),
+                fmt.entry_bfi(entries),
+                allocated=jnp.asarray(alloc),
+                bfi_valid=fmt.entry_bfi_valid(entries),
+                zero=fmt.entry_zero(entries),
+            )
+            l2 = l2.at[t, :length_t].set(new_entries)
+        freed = lease_index[t, n_keep:lease_count[t]]
+        lease_owner[freed] = -1
+        lease_index[t, n_keep:] = -1
+        lease_count[t] = n_keep
+        reclaimed[t] = int(alloc_count[t]) - n_live
+        alloc_count[t] = n_live
+
+    overflow = np.asarray(fleet.overflow) & ~(reclaimed > 0)
+    return dataclasses.replace(
+        fleet,
+        l2=l2,
+        pool=pool,
+        lease_owner=jnp.asarray(lease_owner, jnp.int32),
+        lease_index=jnp.asarray(lease_index, jnp.int32),
+        lease_count=jnp.asarray(lease_count, jnp.int32),
+        alloc_count=jnp.asarray(alloc_count, jnp.int32),
+        overflow=jnp.asarray(overflow, bool),
+    )
+
+
+def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
+                   reclaim: bool = True) -> ChainFleet:
+    """Stream (merge layers ``[0, merge_upto]``) each selected tenant and
+    return the pool quanta this frees to the lease allocator.
+
+    The fleet-granularity analogue of ``chain.stream``: host-side
+    maintenance over the stacked (T, C, P) layout, built on the same
+    ``chain.merge_tables`` core so chain and fleet semantics cannot drift.
+
+    ``mask``: (T,) bool (or scalar) — which tenants to stream.
+    ``merge_upto``: int or (T,) int — per tenant, merge layers
+    ``[0, merge_upto]`` into the base. Tenants whose ``merge_upto`` does
+    not fall strictly below their active volume are skipped (a background
+    job must tolerate racing chain growth, where ``chain.stream`` raises).
+
+    Data movement and row reclamation happen in the shared ``_reclaim``
+    repack (skippable via ``reclaim=False`` for metadata-only merges):
+    rows orphaned by the merge leave the tenant's lease footprint, freed
+    quanta return to the free list, ``overflow`` clears only for tenants
+    that actually shrank, and ``snap_dropped`` clears only where streaming
+    made room below ``max_chain``.
+    """
+    spec = fleet.spec
+    t = spec.n_tenants
+    mask = np.broadcast_to(np.asarray(mask, bool), (t,))
+    upto = np.broadcast_to(np.asarray(merge_upto, np.int64), (t,))
+    lengths = np.asarray(fleet.length).copy()
+    sel = mask & (upto >= 0) & (upto < lengths - 1)
+
+    l1, l2 = fleet.l1, fleet.l2
+    snap_dropped = np.asarray(fleet.snap_dropped).copy()
+    scalable = np.asarray(fleet.scalable)
+    sel_idx = np.flatnonzero(sel)
+    if sel_idx.size:
+        merged_l1, merged_l2 = [], []
+        for i in sel_idx:
+            tl1, tl2, new_len = chain_lib.merge_tables(
+                l1[i], l2[i], int(lengths[i]), int(upto[i]),
+                scalable=bool(scalable[i]),
+            )
+            merged_l1.append(tl1)
+            merged_l2.append(tl2)
+            lengths[i] = new_len
+            snap_dropped[i] &= new_len >= spec.max_chain
+        # one stacked scatter per array: updating tenant-by-tenant would
+        # copy the full (T, C, ...) stacks once per selected tenant
+        idx = jnp.asarray(sel_idx, jnp.int32)
+        l1 = l1.at[idx].set(jnp.stack(merged_l1))
+        l2 = l2.at[idx].set(jnp.stack(merged_l2))
+    out = dataclasses.replace(
+        fleet,
+        l1=l1,
+        l2=l2,
+        length=jnp.asarray(lengths, jnp.int32),
+        snap_dropped=jnp.asarray(snap_dropped, bool),
+    )
+    return _reclaim(out, sel) if reclaim else out
+
+
+def compact(fleet: ChainFleet, mask=None) -> ChainFleet:
+    """Fleet-level GC: repack every (selected) tenant's live rows and
+    return the freed quanta to the allocator free list.
+
+    The fleet analogue of ``chain.compact_pool`` — COW writes and
+    streaming orphan pool rows; this is the background job that hands
+    them back so long-running fleets reach a steady state instead of
+    leaking the pool. ``overflow`` clears only for tenants whose rows
+    were actually reclaimed.
+    """
+    t = fleet.spec.n_tenants
+    sel = (np.ones(t, bool) if mask is None
+           else np.broadcast_to(np.asarray(mask, bool), (t,)))
+    return _reclaim(fleet, sel)
+
+
 # -- per-tenant views & host-side helpers ------------------------------------
 
 
@@ -406,8 +562,25 @@ def fleet_stats(fleet: ChainFleet) -> dict:
         n_tenants=fleet.spec.n_tenants,
         quanta_total=fleet.spec.n_quanta,
         quanta_leased=int(np.sum(owner >= 0)),
+        quanta_free=int(np.sum(owner < 0)),
         rows_allocated=int(np.sum(np.asarray(fleet.alloc_count))),
         mean_chain_length=float(np.mean(np.asarray(fleet.length))),
         overflowed_tenants=int(np.sum(np.asarray(fleet.overflow))),
         snapshot_capped_tenants=int(np.sum(np.asarray(fleet.snap_dropped))),
+    )
+
+
+def tenant_stats(fleet: ChainFleet) -> dict:
+    """Per-tenant occupancy arrays — the scheduler's ranking signal.
+
+    The per-tenant counterpart of ``fleet_stats``: (T,) numpy arrays of
+    chain ``length``, ``alloc_count`` (pool rows held), ``lease_count``
+    (quanta held) and the ``overflow``/``snap_dropped`` pressure flags.
+    """
+    return dict(
+        length=np.asarray(fleet.length),
+        alloc_count=np.asarray(fleet.alloc_count),
+        lease_count=np.asarray(fleet.lease_count),
+        overflow=np.asarray(fleet.overflow),
+        snap_dropped=np.asarray(fleet.snap_dropped),
     )

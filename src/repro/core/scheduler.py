@@ -1,0 +1,200 @@
+"""MaintenanceScheduler: budgeted background streaming beside serving.
+
+The paper's §6.4 measures a ~100x guest-latency hit while a chain is
+being streamed: the maintenance job competes with the guest for the data
+path. Fleet-side, the equivalent anti-pattern is stop-the-world
+maintenance — stream every tenant at once and eat one enormous tick.
+
+The scheduler is the provider's background job queue instead: each
+``tick()`` (driven by the serving loop between decode steps, see
+``serve/engine.py``) streams at most ``max_tenants_per_tick`` tenants,
+picked by occupancy — longest chains first (they pay the worst Eq. 1
+walk cost and pin the most superseded rows), heaviest row footprint as
+the tie-break. Streaming returns freed quanta to the fleet allocator's
+free list (``fleet.stream_tenants``), and tenants that stay wedged
+(``overflow`` after streaming reclaimed nothing) trigger a fleet-wide
+``compact``. ``benchmarks/maintenance.py`` measures the amortization.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fleet as fleet_lib
+from repro.core.fleet import ChainFleet
+
+
+class MaintenanceScheduler:
+    """Budgeted queue of per-tenant streaming jobs over a ``ChainFleet``.
+
+    The scheduler owns the fleet value between ticks (functional updates:
+    ``self.fleet`` is replaced, never mutated in place). The serving path
+    keeps reading/writing the same object through the scheduler::
+
+        sched = MaintenanceScheduler(fl, max_tenants_per_tick=2)
+        sched.fleet = fleet.write(sched.fleet, ids, data)   # serve
+        sched.tick()                                        # maintain
+
+    ``stream_chain_threshold``: chains shorter than this are left alone
+    (streaming a length-2 chain buys little and costs a repack).
+    ``compact_on_overflow``: run a fleet-wide GC when streaming alone did
+    not clear a tenant's ``overflow``.
+    """
+
+    def __init__(self, fleet: ChainFleet, *, max_tenants_per_tick: int = 1,
+                 stream_chain_threshold: int = 3,
+                 compact_on_overflow: bool = True):
+        if max_tenants_per_tick < 1:
+            raise ValueError("max_tenants_per_tick must be >= 1")
+        if stream_chain_threshold < 2:
+            raise ValueError(
+                "stream_chain_threshold must be >= 2 (a length-1 chain "
+                "has nothing below its active volume to merge)"
+            )
+        self.fleet = fleet
+        self.max_tenants_per_tick = max_tenants_per_tick
+        self.stream_chain_threshold = stream_chain_threshold
+        self.compact_on_overflow = compact_on_overflow
+        self.ticks = 0
+        self.tenants_streamed = 0
+        self.compactions = 0
+        self.quanta_reclaimed = 0
+        # tenants a tick could not help, keyed by the occupancy
+        # fingerprint they were parked at: they are skipped until their
+        # state changes. This is what makes the queue converge — without
+        # it a length-2 chain (streaming shortens nothing) or a latched
+        # overflow with nothing reclaimable would be re-picked and
+        # futilely streamed/compacted on every tick, and drain() would
+        # never see an empty backlog.
+        self._wedged: dict[int, tuple] = {}
+
+    def _fingerprints(self, st) -> dict[int, tuple]:
+        return {
+            t: (int(st["length"][t]), int(st["alloc_count"][t]),
+                int(st["lease_count"][t]))
+            for t in range(self.fleet.spec.n_tenants)
+        }
+
+    def _still_wedged(self, st) -> set[int]:
+        """Drop wedged tenants whose occupancy changed; return the rest."""
+        fp = self._fingerprints(st)
+        self._wedged = {t: f for t, f in self._wedged.items() if fp[t] == f}
+        return set(self._wedged)
+
+    # -- queue policy --------------------------------------------------------
+
+    def _free_quanta(self, st) -> int:
+        # leases are disjoint (property-tested), so free = total - held
+        return self.fleet.spec.n_quanta - int(np.sum(st["lease_count"]))
+
+    def candidates(self, st=None) -> list[int]:
+        """Tenants needing streaming, most urgent first.
+
+        Ranking: longest chain first (worst vanilla walk cost, most
+        superseded rows), then largest row footprint. Tenants under
+        pressure (``overflow``/``snap_dropped``) qualify regardless of
+        the length threshold — they are the ones ``check_pool_capacity``
+        would raise for. Tenants a previous tick could not help are
+        parked until their occupancy changes (see ``_wedged``).
+
+        Pass ``st`` (a ``fleet.tenant_stats`` result) to reuse stats the
+        caller already synced off the device.
+        """
+        st = fleet_lib.tenant_stats(self.fleet) if st is None else st
+        wedged = self._still_wedged(st)
+        streamable = st["length"] >= 2          # something below the active
+        need = streamable & (
+            (st["length"] >= self.stream_chain_threshold)
+            | st["overflow"] | st["snap_dropped"]
+        )
+        order = np.lexsort((-st["alloc_count"], -st["length"]))
+        return [int(t) for t in order if need[t] and int(t) not in wedged]
+
+    def _compactable(self, st) -> list[int]:
+        """Unparked overflowed tenants — work for the compact fallback
+        even when they are too short to stream (length 1)."""
+        if not self.compact_on_overflow:
+            return []
+        self._still_wedged(st)
+        return [int(t) for t in np.flatnonzero(st["overflow"])
+                if int(t) not in self._wedged]
+
+    def backlog(self, st=None) -> int:
+        """Outstanding maintenance work: stream candidates plus tenants
+        only the compact fallback can help."""
+        st = fleet_lib.tenant_stats(self.fleet) if st is None else st
+        return len(set(self.candidates(st)) | set(self._compactable(st)))
+
+    # -- one tick of background work -----------------------------------------
+
+    def tick(self) -> dict:
+        """Run one maintenance slice: stream at most K tenants, compact
+        the ones wedged on overflow. Returns a report of the work done.
+        A drained (or fully parked) queue ticks for free: one
+        tenant_stats sync, no streaming, no repack."""
+        st0 = fleet_lib.tenant_stats(self.fleet)
+        picks = self.candidates(st0)[: self.max_tenants_per_tick]
+        compactable = self._compactable(st0)
+        self.ticks += 1
+        if not picks and not compactable:
+            return dict(streamed=[], compacted=False, quanta_reclaimed=0,
+                        backlog=0)
+
+        fp_before = self._fingerprints(st0)
+        free_before = self._free_quanta(st0)
+        n_t = self.fleet.spec.n_tenants
+        if picks:
+            mask = np.zeros(n_t, bool)
+            mask[picks] = True
+            # merge everything below each tenant's active volume
+            upto = st0["length"] - 2
+            self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto)
+        compacted = False
+        still_over = np.flatnonzero(np.asarray(self.fleet.overflow))
+        need_compact = [int(t) for t in still_over
+                        if int(t) not in self._wedged]
+        if self.compact_on_overflow and need_compact:
+            # compact only the tenants that need it — a fleet-wide repack
+            # inside one serving tick would be the stop-the-world cliff
+            # this scheduler exists to avoid
+            mask = np.zeros(n_t, bool)
+            mask[need_compact] = True
+            self.fleet = fleet_lib.compact(self.fleet, mask)
+            compacted = True
+        # park every touched tenant that made no progress (no-op stream,
+        # unreclaimable overflow, ...) at its current occupancy, so it is
+        # not re-picked until something about it changes
+        st1 = fleet_lib.tenant_stats(self.fleet)
+        fp_after = self._fingerprints(st1)
+        for t in set(picks) | set(compactable):
+            if fp_after[t] == fp_before[t]:
+                self._wedged[t] = fp_after[t]
+        reclaimed = self._free_quanta(st1) - free_before
+        self.tenants_streamed += len(picks)
+        self.compactions += int(compacted)
+        self.quanta_reclaimed += max(reclaimed, 0)
+        return dict(
+            streamed=picks,
+            compacted=compacted,
+            quanta_reclaimed=reclaimed,
+            backlog=self.backlog(st1),
+        )
+
+    def drain(self, *, max_ticks: int = 10_000) -> int:
+        """Tick until the queue is empty (tests / shutdown). Returns the
+        number of ticks it took."""
+        for i in range(max_ticks):
+            if not self.backlog():
+                return i
+            self.tick()
+        raise RuntimeError("maintenance backlog did not drain")
+
+    def stats(self) -> dict:
+        """Lifetime counters plus the fleet's current occupancy."""
+        return dict(
+            ticks=self.ticks,
+            tenants_streamed=self.tenants_streamed,
+            compactions=self.compactions,
+            quanta_reclaimed=self.quanta_reclaimed,
+            **fleet_lib.fleet_stats(self.fleet),
+        )

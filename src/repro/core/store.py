@@ -51,6 +51,7 @@ def read(chain: Chain, page_ids: jax.Array, *, method: str = "auto"):
 write = chain_lib.write
 snapshot = chain_lib.snapshot
 stream = chain_lib.stream
+compact_pool = chain_lib.compact_pool
 convert_to_scalable = chain_lib.convert_to_scalable
 
 
@@ -108,5 +109,7 @@ def check_pool_capacity(chain: Chain) -> None:
     if bool(chain.snap_dropped):
         raise RuntimeError(
             "snapshot dropped: the chain is at max_chain; stream() to "
-            "shorten it (this also clears the flag)"
+            "shorten it (the flag clears only if streaming actually makes "
+            "room — a merge_upto=0 stream shortens nothing and leaves it "
+            "latched)"
         )

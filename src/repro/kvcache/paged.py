@@ -45,6 +45,7 @@ class _Seq:
     parent: Optional[int]
     length: int
     refs: set = dataclasses.field(default_factory=set)  # blocks we refcount
+    freed: bool = False      # tombstone: freed but pinned by live children
 
 
 class PagedKVCache:
@@ -74,9 +75,9 @@ class PagedKVCache:
         return sid
 
     def fork(self, sid: int) -> int:
+        parent = self._live_seq(sid)
         child = self._next_sid
         self._next_sid += 1
-        parent = self._seqs[sid]
         mb = self.cfg.max_blocks_per_seq
         shared, _, _ = self._resolve(sid)
         if self.scalable:
@@ -96,12 +97,39 @@ class PagedKVCache:
         return child
 
     def free_seq(self, sid: int) -> None:
-        for b in self._seqs[sid].refs:
-            self._ref[b] -= 1
-            if self._ref[b] <= 0:
-                self._free.append(int(b))
-                self._ref[b] = 0
-        del self._seqs[sid]
+        """Free a sequence, tombstoning it while forked children live.
+
+        A vanilla-forked child resolves missing blocks by walking its
+        ``parent`` chain, so a parent cannot simply vanish while children
+        exist: the walk would ``KeyError`` and the child would lose every
+        ancestor-owned block. Freeing such a parent leaves a *tombstone* —
+        the node and its block refs stay until the last descendant is
+        freed, then the whole dead suffix of the chain is reaped at once.
+        """
+        seq = self._live_seq(sid)
+        seq.freed = True
+        self._reap(seq)
+
+    def _live_seq(self, sid: int) -> _Seq:
+        seq = self._seqs[sid]
+        if seq.freed:
+            raise KeyError(f"sequence {sid} has been freed")
+        return seq
+
+    def _reap(self, seq: _Seq) -> None:
+        # Release freed nodes bottom-up: a node goes only when *nothing*
+        # (live or tombstoned) still names it as parent; its removal may
+        # in turn orphan a tombstoned ancestor, so walk up the chain.
+        while (seq is not None and seq.freed
+               and not any(s.parent == seq.sid for s in self._seqs.values())):
+            for b in seq.refs:
+                self._ref[b] -= 1
+                if self._ref[b] <= 0:
+                    self._free.append(int(b))
+                    self._ref[b] = 0
+            del self._seqs[seq.sid]
+            seq = (self._seqs.get(seq.parent)
+                   if seq.parent is not None else None)
 
     # -- resolution: vanilla walk vs direct ------------------------------------
 
@@ -197,12 +225,22 @@ class PagedKVCache:
         seq.refs.add(b)
         return b
 
-    def append(self, sid: int, k: jax.Array, v: jax.Array) -> None:
-        """Append one token's K/V. k, v: (L, n_kv_heads, head_dim)."""
-        seq = self._seqs[sid]
-        bs = self.cfg.block_size
-        blk_idx, off = divmod(seq.length, bs)
-        resolved, owner, _ = self._resolve(sid)
+    def prepare_write(self, sid: int) -> int:
+        """Make the block receiving the next token writable by ``sid``.
+
+        COW-copies an ancestor-owned block (or allocates a fresh one) so
+        an in-place K/V scatter — the jitted decode step's — can never
+        touch a block shared with another sequence. Returns the pool block
+        that will hold the write. Commit the token afterwards with
+        ``advance``. This is the public contract the serving engine uses;
+        it must not reach into ``_seqs`` and mutate the refcount/ownership
+        invariants by hand.
+        """
+        seq = self._live_seq(sid)
+        blk_idx = seq.length // self.cfg.block_size
+        if blk_idx >= self.cfg.max_blocks_per_seq:
+            raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
+        resolved, _, _ = self._resolve(sid)
         cur = int(resolved[blk_idx])
         owns = seq.table[blk_idx] >= 0 and seq.owner[blk_idx] in (-1, sid)
         if cur < 0:
@@ -222,9 +260,28 @@ class PagedKVCache:
             nb = int(seq.table[blk_idx])
         seq.table[blk_idx] = nb
         seq.owner[blk_idx] = sid
+        return nb
+
+    def advance(self, sid: int) -> None:
+        """Commit one token written externally into a slot set up by
+        ``prepare_write`` (e.g. by the decode step's in-step scatter)."""
+        seq = self._live_seq(sid)
+        blk_idx = seq.length // self.cfg.block_size
+        if seq.table[blk_idx] < 0 or seq.owner[blk_idx] != sid:
+            raise RuntimeError(
+                f"sequence {sid} has no prepared slot at position "
+                f"{seq.length}; call prepare_write(sid) before advance(sid)"
+            )
+        seq.length += 1
+
+    def append(self, sid: int, k: jax.Array, v: jax.Array) -> None:
+        """Append one token's K/V. k, v: (L, n_kv_heads, head_dim)."""
+        seq = self._live_seq(sid)
+        off = seq.length % self.cfg.block_size
+        nb = self.prepare_write(sid)
         self.pool_k = self.pool_k.at[:, nb, off].set(k.astype(self.cfg.dtype))
         self.pool_v = self.pool_v.at[:, nb, off].set(v.astype(self.cfg.dtype))
-        seq.length += 1
+        self.advance(sid)
 
     def append_prefill(self, sid: int, k: jax.Array, v: jax.Array) -> None:
         """Bulk append. k, v: (L, T, n_kv_heads, head_dim)."""

@@ -6,7 +6,13 @@ streams the K/V into the paged pool; ``fork_request`` COW-forks a sequence
 copies the resolved block table forward (sQEMU snapshotting), with the
 vanilla cache it just records a parent pointer and pays the chain walk on
 every table materialization; ``step()`` decodes one token for every active
-sequence through ``paged_decode_step``.
+sequence through ``paged_decode_step``; ``finish_request`` releases a
+sequence's blocks back to the pool (tombstoned while forks are live).
+
+The engine can also drive a fleet maintenance plane: pass a
+``core.scheduler.MaintenanceScheduler`` and each decode step ends with one
+budgeted maintenance tick — background streaming/GC running *beside* the
+serving path instead of stopping the world (paper §6.4).
 """
 
 from __future__ import annotations
@@ -26,7 +32,7 @@ from repro.serve.paged_decode import paged_decode_step
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, scalable: bool = True,
                  n_blocks: int = 512, block_size: int = 16,
-                 max_blocks_per_seq: int = 64):
+                 max_blocks_per_seq: int = 64, scheduler=None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError("paged serving engine supports attention LMs")
         self.cfg = cfg
@@ -45,6 +51,10 @@ class Engine:
         # Scratch block absorbing the in-step pool writes of padded batch
         # rows, so a padded decode can never touch a live sequence's blocks.
         self._pad_block = self.kv.reserve_block()
+        # Optional MaintenanceScheduler (core.scheduler) ticked between
+        # decode steps — the background half of the serving loop.
+        self.scheduler = scheduler
+        self.last_maintenance: dict | None = None
 
     def add_request(self, prompt_tokens: np.ndarray) -> int:
         """Prefill a prompt; returns the sequence id."""
@@ -62,15 +72,14 @@ class Engine:
         self.active[child] = list(self.active.get(sid, []))
         return child
 
-    def _cow_prepare(self, sid: int) -> None:
-        """Ensure the block the next token lands in is owned by ``sid``."""
-        length = self.kv.seq_length(sid)
-        k = jnp.zeros((self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.hd),
-                      L.COMPUTE_DTYPE)
-        # append a placeholder via the cache's COW path, then rewind: the
-        # jitted step will overwrite the slot contents in-place.
-        self.kv.append(sid, k, k)
-        self.kv._seqs[sid].length = length
+    def finish_request(self, sid: int) -> None:
+        """Retire a finished sequence and release its blocks to the pool.
+
+        Safe with live forks: the cache tombstones the parent until the
+        last descendant is freed (``PagedKVCache.free_seq``).
+        """
+        del self.active[sid]
+        self.kv.free_seq(sid)
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -86,9 +95,14 @@ class Engine:
         device dispatch: stacked block tables, padded to a size bucket."""
         sids = sorted(self.active)
         if not sids:
+            # an idle engine is the cheapest time for background work —
+            # keep draining the maintenance backlog while polling
+            self._maintain()
             return {}
         for sid in sids:
-            self._cow_prepare(sid)
+            # COW-prepare the slot the decode step's in-place scatter will
+            # hit; the write itself happens on-device inside the jit.
+            self.kv.prepare_write(sid)
         pad_to = self._bucket(len(sids))
         tables, lengths = self.kv.batched_tables(
             sids, pad_to=pad_to, pad_block=self._pad_block
@@ -103,15 +117,25 @@ class Engine:
         out = {}
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, sid in enumerate(sids):
-            self.kv._seqs[sid].length += 1
+            self.kv.advance(sid)
             tok = int(nxt[i])
             self.active[sid].append(tok)
             out[sid] = tok
+        self._maintain()
         return out
 
+    def _maintain(self) -> None:
+        """One budgeted maintenance slice between decode steps: stream/GC
+        a few cold tenants instead of ever stopping the world."""
+        if self.scheduler is not None:
+            self.last_maintenance = self.scheduler.tick()
+
     def memory_stats(self) -> dict:
-        return dict(
+        stats = dict(
             blocks_in_use=self.kv.blocks_in_use(),
             lookups=self.kv.lookup_count,
             n_seqs=len(self.active),
         )
+        if self.scheduler is not None:
+            stats["maintenance"] = self.scheduler.stats()
+        return stats

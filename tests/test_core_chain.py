@@ -1,5 +1,7 @@
 """Unit tests: entry format, chain ops, resolvers, store, streaming."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -127,6 +129,49 @@ def test_stream_preserves_content_and_shortens_chain():
         np.testing.assert_allclose(np.asarray(before), np.asarray(after),
                                    rtol=1e-6)
         assert int(ch2.length) == int(ch.length) - 2
+
+
+def test_stream_pool_exhaustion_flags_overflow_not_raise():
+    """stream(copy_data=True) on a full pool must follow the write path's
+    contract: drop the copy (degrade to a metadata-only merge), set
+    ``overflow`` and leave the chain consistent — not unwind mid-op. The
+    maintenance scheduler relies on this to skip-and-retry after GC."""
+    ch = store.create(n_pages=64, page_size=8, max_chain=4, pool_capacity=16)
+    ids = jnp.arange(8, dtype=jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((8, 8)))
+    ch = store.snapshot(ch)
+    ch = store.write(ch, ids, 2 * jnp.ones((8, 8)))   # pool now full
+    ch = store.snapshot(ch)
+    streamed = store.stream(ch, merge_upto=1, copy_data=True)
+    assert bool(streamed.overflow)
+    assert int(streamed.length) == 2                  # merge still happened
+    np.testing.assert_allclose(
+        np.asarray(store.materialize(streamed)),
+        np.asarray(store.materialize(ch)), rtol=1e-6)
+    # GC then retry: compact_pool clears the flag and makes room
+    retried = store.stream(store.compact_pool(streamed), 0, copy_data=True)
+    assert not bool(retried.overflow)
+
+
+def test_stream_copy_data_preserves_stripped_vanilla_image():
+    """Regression: the data-copy path must not rewrite the pointers of
+    bfi-invalid upper-layer entries. In an image written by a vanilla
+    driver the extension word is genuinely zero (``strip_extension``), so
+    every allocated entry reads as bfi=0 — which is *not* a reference to
+    the merged base. The old code treated it as one and aliased such
+    entries onto the base's rewritten rows, resurrecting stale data."""
+    ch = make_store(scalable=False)
+    ids = jnp.arange(8, dtype=jnp.int32)
+    ch = store.write(ch, ids, jnp.ones((8, 8)))
+    ch = store.snapshot(ch)
+    ch = store.write(ch, ids, 2 * jnp.ones((8, 8)))   # upper layer owns ids
+    ch = store.snapshot(ch)
+    ch = store.write(ch, jnp.array([30], jnp.int32), jnp.ones((1, 8)))
+    # the on-disk vanilla view: reserved word1 bits are all zero
+    ch = dataclasses.replace(ch, l2=fmt.strip_extension(ch.l2))
+    streamed = store.stream(ch, merge_upto=0, copy_data=True)
+    out, _ = store.read(streamed, ids, method="vanilla")
+    np.testing.assert_allclose(np.asarray(out), 2.0)  # not the stale 1.0
 
 
 def test_convert_to_scalable_enables_direct():

@@ -59,6 +59,80 @@ def test_divergent_writes_cow(scalable):
                                np.asarray(k2 * 7), rtol=1e-6)
 
 
+@pytest.mark.parametrize("scalable", [True, False])
+def test_free_parent_with_live_fork_keeps_child_resolvable(scalable):
+    """Regression: freeing a parent while a vanilla-forked child is live
+    used to leave the child's ``parent`` pointer dangling — its next
+    resolve raised KeyError and the chain walk lost every ancestor-owned
+    block. The parent is now tombstoned until the last descendant goes."""
+    cache = PagedKVCache(KV, scalable=scalable)
+    sid = cache.new_seq()
+    k, v = rand_kv(10)
+    cache.append_prefill(sid, k, v)
+    child = cache.fork(sid)
+    cache.free_seq(sid)
+    # the child still resolves and reads the full shared prefix
+    ck, cv = cache.gather(child)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(k), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cv), np.asarray(v), rtol=1e-6)
+    # COW through the tombstoned parent still works
+    k2, v2 = rand_kv(1)
+    cache.append(child, k2[:, 0], v2[:, 0])
+    # freed parents reject further use
+    with pytest.raises(KeyError):
+        cache.append(sid, k2[:, 0], v2[:, 0])
+    with pytest.raises(KeyError):
+        cache.fork(sid)
+    # the whole dead chain is reaped once the child goes: no block leaks
+    cache.free_seq(child)
+    assert cache.blocks_in_use() == 0
+
+
+def test_free_seq_cascades_through_tombstoned_ancestors():
+    cache = PagedKVCache(KV, scalable=False)
+    a = cache.new_seq()
+    k, v = rand_kv(6)
+    cache.append_prefill(a, k, v)
+    b = cache.fork(a)
+    c = cache.fork(b)
+    cache.free_seq(a)
+    cache.free_seq(b)       # both tombstoned: c walks a <- b <- c
+    ck, _ = cache.gather(c)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(k), rtol=1e-6)
+    cache.free_seq(c)       # reaps c, then b, then a
+    assert cache.blocks_in_use() == 0
+    assert cache._seqs == {}
+
+
+def test_prepare_write_advance_contract():
+    """The engine-facing public API: prepare_write COWs the landing block,
+    advance commits a token written externally (in-place scatter)."""
+    cache = PagedKVCache(KV, scalable=True)
+    sid = cache.new_seq()
+    k, v = rand_kv(KV.block_size)        # exactly one full block
+    cache.append_prefill(sid, k, v)
+    child = cache.fork(sid)
+    with pytest.raises(RuntimeError, match="prepare_write"):
+        cache.advance(child)             # no prepared slot yet
+    blk = cache.prepare_write(child)
+    # the landing block is owned by the child and not shared with the parent
+    assert int(cache._seqs[child].owner[1]) == child
+    # simulate the decode step's in-place write, then commit
+    tok_k, tok_v = rand_kv(1)
+    cache.pool_k = cache.pool_k.at[:, blk, 0].set(tok_k[:, 0])
+    cache.pool_v = cache.pool_v.at[:, blk, 0].set(tok_v[:, 0])
+    cache.advance(child)
+    assert cache.seq_length(child) == KV.block_size + 1
+    ck, _ = cache.gather(child)
+    np.testing.assert_allclose(np.asarray(ck[:, -1]), np.asarray(tok_k[:, 0]),
+                               rtol=1e-6)
+    # parent untouched
+    pk, _ = cache.gather(sid)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(k), rtol=1e-6)
+    # prepare_write is idempotent before the advance
+    assert cache.prepare_write(child) == blk
+
+
 def test_direct_fork_resolution_is_o1_vanilla_walks():
     deep_v = PagedKVCache(KV, scalable=False)
     deep_s = PagedKVCache(KV, scalable=True)
@@ -131,6 +205,95 @@ def test_engine_padded_batch_matches_reference():
     live_block = int(eng.kv._seqs[a].table[0])   # owned by sequence a
     with pytest.raises(ValueError, match="not reserved"):
         eng.kv.batched_tables([a], pad_to=2, pad_block=live_block)
+
+
+def test_engine_drives_maintenance_between_steps():
+    """A MaintenanceScheduler attached to the engine streams the fleet in
+    the background without perturbing decoding: tokens match a scheduler-
+    less engine bit-for-bit while the fleet's chains shrink."""
+    import jax.numpy as jnp2
+    from repro.core import fleet as fleet_lib
+    from repro.core.scheduler import MaintenanceScheduler
+    from repro.serve.engine import Engine
+
+    spec = fleet_lib.FleetSpec(n_tenants=4, n_pages=64, page_size=4,
+                               max_chain=8, pool_capacity=2048,
+                               lease_quantum=8, l2_per_table=32)
+    fl = fleet_lib.create(spec)
+    ids = jnp2.broadcast_to(jnp2.arange(8, dtype=jnp2.int32)[None], (4, 8))
+    for layer in range(5):
+        fl = fleet_lib.write(fl, ids, jnp2.full((4, 8, 4), float(layer + 1)))
+        if layer < 4:
+            fl = fleet_lib.snapshot(fl)
+    tenant_data = np.asarray(fleet_lib.materialize(fl))
+
+    cfg = smoke_config("qwen2-7b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    prompt = np.asarray(jax.random.randint(KEY, (9,), 0, cfg.vocab_size))
+
+    sched = MaintenanceScheduler(fl, max_tenants_per_tick=1)
+    eng = Engine(cfg, params, scalable=True, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16, scheduler=sched)
+    ref = Engine(cfg, params, scalable=True, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16)
+    a, b = eng.add_request(prompt), ref.add_request(prompt)
+    outs = [(eng.step()[a], ref.step()[b]) for _ in range(5)]
+    assert all(x == y for x, y in outs)
+    # the background plane really ran: one tenant streamed per step
+    assert eng.last_maintenance is not None
+    assert sched.tenants_streamed >= 4
+    assert np.asarray(sched.fleet.length).tolist() == [2] * 4
+    assert eng.memory_stats()["maintenance"]["quanta_reclaimed"] > 0
+    np.testing.assert_allclose(np.asarray(fleet_lib.materialize(sched.fleet)),
+                               tenant_data, rtol=1e-6)
+
+
+def test_finish_request_releases_blocks_with_live_forks():
+    cfg = smoke_config("qwen2-7b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    from repro.serve.engine import Engine
+
+    prompt = np.asarray(jax.random.randint(KEY, (9,), 0, cfg.vocab_size))
+    eng = Engine(cfg, params, scalable=False, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16)
+    a = eng.add_request(prompt)
+    b = eng.fork_request(a)
+    eng.finish_request(a)           # parent retires first (tombstoned)
+    out = eng.step()
+    assert list(out) == [b]         # the fork keeps decoding
+    eng.finish_request(b)
+    assert eng.memory_stats()["blocks_in_use"] == 0
+    assert eng.step() == {}
+
+
+def test_idle_engine_still_drains_maintenance_backlog():
+    """step() with no active sequences must still tick the scheduler —
+    idle polling is the cheapest time for background work."""
+    from repro.core import fleet as fleet_lib
+    from repro.core.scheduler import MaintenanceScheduler
+    from repro.serve.engine import Engine
+
+    spec = fleet_lib.FleetSpec(n_tenants=2, n_pages=64, page_size=4,
+                               max_chain=8, pool_capacity=512,
+                               lease_quantum=8, l2_per_table=32)
+    fl = fleet_lib.create(spec)
+    ids = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32)[None], (2, 4))
+    for layer in range(4):
+        fl = fleet_lib.write(fl, ids, jnp.ones((2, 4, 4)))
+        if layer < 3:
+            fl = fleet_lib.snapshot(fl)
+
+    cfg = smoke_config("qwen2-7b")
+    sched = MaintenanceScheduler(fl, max_tenants_per_tick=1)
+    eng = Engine(cfg, get_model(cfg).init(KEY), n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16, scheduler=sched)
+    assert eng.step() == {}                 # idle, but the tick ran
+    assert sched.ticks == 1
+    while sched.candidates():
+        eng.step()
+    assert np.asarray(sched.fleet.length).tolist() == [2, 2]
 
 
 def test_engine_matches_dense_decode_path():
