@@ -1,8 +1,11 @@
-"""Multi-tenant fleet benchmark: batched resolve/COW vs a per-disk loop.
+"""Multi-tenant fleet benchmark: batched resolve/COW vs a per-disk loop,
+plus a resolver-method axis (vmapped jnp gather vs Pallas kernels).
 
 The paper's Eq. 1 scaling is measured per chain; the cloud trace in §3 is
-thousands of tenant disks hitting one backend concurrently. This scenario
-sweeps tenants × chain-length and times, for each cell:
+thousands of tenant disks hitting one backend concurrently. Two sections
+(each a ``section`` key in the JSON rows):
+
+``fleet_vs_loop`` sweeps tenants × chain-length and times, per cell:
 
 * ``fleet``  — one batched ``core.fleet`` resolve over all T tenants
   (single dispatch, stacked tables, shared pool);
@@ -14,12 +17,20 @@ verifying bit-identical owner/found metadata between the two, plus the
 fleet-granularity Eq. 1 signal (vanilla lookups grow with chain length,
 direct stays at one per request).
 
+``resolver`` sweeps resolver methods (``vanilla`` vs ``pallas_vanilla``,
+``direct`` vs ``pallas_direct``) over chain lengths up to 500 — the
+paper's RocksDB experiment regime — on fleets whose stacked tables are
+*synthesized* directly (no op replay, so a 500-layer chain builds in
+milliseconds; see ``synth_fleet``). Each kernel cell is verified
+bit-identical against its vmapped-gather counterpart on the same fleet.
+
 Run: ``PYTHONPATH=src python benchmarks/fleet.py --tenants 64``
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +47,7 @@ except ModuleNotFoundError:  # invoked as `python benchmarks/fleet.py`
     sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
     from benchmarks.common import emit, emit_json, time_fn
 from repro.core import fleet as fleet_lib
+from repro.core import format as fmt
 from repro.core import resolve as resolve_lib
 from repro.core import store
 
@@ -86,6 +98,124 @@ def _round_up(n: int, q: int) -> int:
     return -(-n // q) * q
 
 
+def synth_fleet(n_tenants: int, chain_len: int, *, n_pages: int = 512,
+                page_size: int = 16, fill: float = 0.9,
+                scalable: bool = True, seed: int = 0):
+    """Synthesize a resolve-ready fleet of ``chain_len``-layer chains.
+
+    Stacked L1/L2 tables are constructed directly with numpy instead of
+    replaying ``chain_len`` write+snapshot rounds, so the paper's 500-layer
+    RocksDB regime builds in milliseconds. Per tenant, ``fill * n_pages``
+    pages are live with owners uniformly distributed over the layers (the
+    paper's §6.1 methodology):
+
+    * ``scalable=True`` mirrors copy-forward snapshots: layer ``l`` carries
+      an entry for every page owned by layers ``<= l``, bfi-stamped — the
+      direct path is O(1) and the walk stops at the active layer;
+    * ``scalable=False`` is a vanilla chain: layer ``l`` only holds its
+      own writes, so the walk pays the full Eq. 1 depth.
+
+    The result is resolve/read-path only: the lease allocator state is
+    left empty (do not ``fleet.write`` to it).
+    """
+    rng = np.random.default_rng(seed)
+    n_filled = int(n_pages * fill)
+    lease_quantum = 64
+    spec = fleet_lib.FleetSpec(
+        n_tenants=n_tenants,
+        n_pages=n_pages,
+        page_size=page_size,
+        max_chain=chain_len,
+        pool_capacity=_round_up(n_filled * n_tenants, lease_quantum),
+        lease_quantum=lease_quantum,
+    )
+    owner = np.full((n_tenants, n_pages), -1, np.int64)       # owning layer
+    rows = np.zeros((n_tenants, n_pages), np.uint32)          # pool row
+    for t in range(n_tenants):
+        pages = rng.permutation(n_pages)[:n_filled]
+        owner[t, pages] = rng.integers(0, chain_len, n_filled)
+        rows[t, pages] = t * n_filled + np.arange(n_filled, dtype=np.uint32)
+
+    layers = np.arange(chain_len, dtype=np.int64)[None, :, None]  # (1, C, 1)
+    has_page = owner[:, None, :] >= 0
+    if scalable:
+        alloc = has_page & (owner[:, None, :] <= layers)
+    else:
+        alloc = owner[:, None, :] == layers
+    entries = fmt.pack_entry(
+        jnp.asarray(np.broadcast_to(rows[:, None, :], alloc.shape)),
+        jnp.asarray(np.maximum(owner, 0)[:, None, :] * np.ones_like(layers)),
+        allocated=jnp.asarray(alloc),
+        bfi_valid=scalable,
+    )
+    l2 = fmt.empty_entries((n_tenants, spec.max_chain, n_pages))
+    l2 = l2.at[:, :chain_len].set(entries)
+    l1 = jnp.asarray(
+        alloc.reshape(n_tenants, chain_len, spec.n_l1, spec.l2_per_table)
+        .max(axis=3).astype(np.uint32)
+    )
+    pool = jnp.asarray(
+        rng.standard_normal((spec.pool_capacity, page_size)), jnp.float32)
+
+    fl = fleet_lib.create(spec, scalable=scalable)
+    return dataclasses.replace(
+        fl,
+        l1=fl.l1.at[:, :chain_len].set(l1),
+        l2=l2,
+        pool=pool,
+        length=jnp.full((n_tenants,), chain_len, jnp.int32),
+        alloc_count=jnp.full((n_tenants,), n_filled, jnp.int32),
+    )
+
+
+#: kernel method → the vmapped-jnp method producing bit-identical results
+KERNEL_BASELINE = {"pallas_vanilla": "vanilla", "pallas_direct": "direct"}
+
+
+def bench_resolver_cell(n_tenants: int, chain_len: int, method: str, *,
+                        batch: int, seed: int = 0, verify: bool = True,
+                        iters: int = 9) -> dict:
+    """Time one resolver method on a synthesized fleet.
+
+    Walk methods run on vanilla-format chains (the regime where the walk
+    actually pays O(chain)); direct methods on scalable chains (bfi
+    entries exist to be looked up). Kernel methods are verified
+    bit-identical — all five ResolveResult fields, including ptr — to
+    their vmapped baseline on the same fleet.
+    """
+    scalable = method in ("direct", "pallas_direct")
+    fl = synth_fleet(n_tenants, chain_len, scalable=scalable, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ids = jnp.asarray(
+        rng.integers(0, fl.spec.n_pages, (n_tenants, batch)), jnp.int32)
+
+    resolver = fleet_lib.get_resolver(method)
+    if verify and method in KERNEL_BASELINE:
+        base = fleet_lib.get_resolver(KERNEL_BASELINE[method])(fl, ids)
+        res = resolver(fl, ids)
+        for field in res._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res, field)),
+                np.asarray(getattr(base, field)),
+                err_msg=f"{method} vs {KERNEL_BASELINE[method]} "
+                        f"field {field} (chain {chain_len})",
+            )
+
+    t_res = time_fn(resolver, fl, ids, warmup=2, iters=iters)
+    res = resolver(fl, ids)
+    pages = n_tenants * batch
+    return dict(
+        section="resolver",
+        tenants=n_tenants,
+        chain=chain_len,
+        method=method,
+        format="scalable" if scalable else "vanilla",
+        resolve_us=t_res * 1e6,
+        mpages_s=pages / t_res / 1e6,
+        mean_lookups=float(jnp.mean(res.lookups)),
+    )
+
+
 def verify_equivalence(fl, chains, ids, method: str) -> None:
     """Batched fleet resolution must match the per-chain loop exactly."""
     fr = fleet_lib.get_resolver(method)(fl, ids)
@@ -129,6 +259,7 @@ def bench_cell(n_tenants: int, chain_len: int, *, batch: int, method: str,
     pages = n_tenants * batch
     res = fleet_resolver(fl, ids)
     return dict(
+        section="fleet_vs_loop",
         tenants=n_tenants,
         chain=chain_len,
         method=method,
@@ -149,6 +280,19 @@ def main(argv=None) -> int:
                    choices=["vanilla", "direct", "auto"])
     p.add_argument("--batch", type=int, default=256,
                    help="resolve batch per tenant per call")
+    p.add_argument("--resolver-tenants", type=int, nargs="+", default=[8],
+                   help="tenant counts for the resolver-method sweep")
+    p.add_argument("--resolver-chain-lengths", type=int, nargs="+",
+                   default=[4, 64, 500],
+                   help="chain lengths for the resolver-method sweep "
+                        "(500 = the paper's RocksDB regime)")
+    p.add_argument("--resolver-methods", nargs="+",
+                   default=["vanilla", "pallas_vanilla",
+                            "direct", "pallas_direct"],
+                   choices=["vanilla", "pallas_vanilla",
+                            "direct", "pallas_direct"])
+    p.add_argument("--no-resolver-sweep", action="store_true",
+                   help="skip the resolver-method section")
     p.add_argument("--no-verify", action="store_true")
     p.add_argument("--iters", type=int, default=9,
                    help="timing iterations per cell (median reported)")
@@ -176,6 +320,20 @@ def main(argv=None) -> int:
                     ok = False
                     print(f"WARNING: speedup {r['speedup']:.1f}x < 5x "
                           f"at {t} tenants ({method}, chain {c})")
+    if not args.no_resolver_sweep:
+        for method in args.resolver_methods:
+            for t in args.resolver_tenants:
+                for c in args.resolver_chain_lengths:
+                    r = bench_resolver_cell(
+                        t, c, method, batch=args.batch, seed=args.seed,
+                        verify=not args.no_verify, iters=args.iters)
+                    results.append(r)
+                    emit(
+                        f"resolver_{method}_t{t}_c{c}", r["resolve_us"],
+                        f"format={r['format']};"
+                        f"mpages_s={r['mpages_s']:.2f};"
+                        f"mean_lookups={r['mean_lookups']:.1f}",
+                    )
     if args.json:
         emit_json(args.json, "fleet", results, batch=args.batch)
     return 0 if ok else 1

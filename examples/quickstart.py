@@ -21,10 +21,14 @@ chain = store.snapshot(chain)
 chain = store.write(chain, ids[:8], 2 * jnp.ones((8, 64)))
 print(f"chain length: {store.chain_length(chain)}")
 
-# Reads are identical through either resolver; the cost is not.
+# Reads are identical through either resolver; the cost is not. The
+# "pallas_*" methods run the same strategies as Pallas kernels (compiled
+# on TPU, interpret mode elsewhere — see docs/kernels.md).
 data_direct, res_d = store.read(chain, ids, method="direct")
 data_walk, res_v = store.read(chain, ids, method="vanilla")
+data_kernel, _ = store.read(chain, ids, method="pallas_direct")
 assert jnp.allclose(data_direct, data_walk)
+assert jnp.allclose(data_direct, data_kernel)
 print(f"direct lookups:  {int(res_d.lookups.sum())}  (1 per page — sQEMU)")
 print(f"owners live in snapshots: {sorted(set(int(o) for o in res_d.owner))}")
 

@@ -7,7 +7,10 @@ snapshot creation, chains into the hundreds). ``restore`` materializes the
 virtual disk through either resolver:
 
 * ``method="vanilla"`` — the O(chain) walk (vQemu restore);
-* ``method="direct"``  — sQEMU direct access, O(1) per page.
+* ``method="direct"``  — sQEMU direct access, O(1) per page;
+* ``method="pallas_vanilla"``/``"pallas_direct"`` — the same strategies
+  through the stacked Pallas kernels (``docs/kernels.md``), viewing the
+  checkpoint chain as a one-tenant fleet.
 
 Fig 17's "VM boot time" maps to cold ``restore`` latency (benchmarks/
 fig17_boot.py). The provider's streaming policy (merge beyond a threshold,

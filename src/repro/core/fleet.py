@@ -19,6 +19,11 @@ Every data-path operation is batched across the fleet inside a single jit:
 * ``resolve_{vanilla,direct,auto}`` vmap the table-level resolvers from
   ``core.resolve`` over the tenant axis — one dispatch for the whole
   fleet instead of T dispatches (and T re-traces) of the per-chain path;
+  the ``"pallas_vanilla"``/``"pallas_direct"`` resolver methods run the
+  stacked (T, C, P) Pallas kernels of ``kernels/chain_resolve`` instead
+  (compiled on TPU, interpret mode elsewhere), and ``method="auto"``
+  picks the kernel path whenever the layout qualifies (page axis already
+  a 128-lane multiple — see ``docs/kernels.md``);
 * ``write`` performs fleet-wide COW: lease acquisition, pool scatter and
   per-tenant L1/L2 stamping for all tenants at once, with an optional
   per-tenant mask for partial batches;
@@ -47,6 +52,7 @@ from repro.core import chain as chain_lib
 from repro.core import format as fmt
 from repro.core import resolve as resolve_lib
 from repro.core.chain import Chain, ChainSpec
+from repro.kernels.cow_gather import ops as cow_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,35 +323,117 @@ def _batched_resolver(name: str):
 #: Batched resolvers: page_ids (T, B) → ResolveResult of (T, B) leaves.
 resolve_vanilla = _batched_resolver("vanilla")
 resolve_direct = _batched_resolver("direct")
-resolve_auto = _batched_resolver("auto")
+
+
+def _kernel_layout_ok(spec: FleetSpec) -> bool:
+    """Static (trace-time) rule for ``method="auto"``: use the Pallas
+    kernels only when the page axis is already a 128-lane multiple, so the
+    stacked tables tile with no padding. Explicit ``pallas_*`` methods pad
+    and run the kernel regardless."""
+    return spec.n_pages % 128 == 0
+
+
+@jax.jit
+def resolve_pallas_vanilla(fleet: ChainFleet, page_ids: jax.Array):
+    """Stacked-kernel chain walk; bit-identical to ``resolve_vanilla``."""
+    return resolve_lib.resolve_vanilla_stacked(fleet.l2, fleet.length,
+                                               page_ids)
+
+
+@jax.jit
+def resolve_pallas_direct(fleet: ChainFleet, page_ids: jax.Array):
+    """Stacked-kernel direct access; bit-identical to ``resolve_direct``."""
+    return resolve_lib.resolve_direct_stacked(fleet.l2, fleet.length,
+                                              page_ids)
+
+
+@jax.jit
+def resolve_auto(fleet: ChainFleet, page_ids: jax.Array):
+    """Mixed-image resolution (direct where trusted, walk otherwise).
+
+    Implementation is chosen statically at trace time: the stacked Pallas
+    kernels when the layout qualifies (``_kernel_layout_ok``), the
+    vmapped jnp gather otherwise. Both produce bit-identical results —
+    only the data plane differs. Off-TPU the kernels run in interpret
+    mode (so CI exercises them), which is slower than the vmapped gather;
+    latency-sensitive CPU callers with lane-aligned layouts should pass
+    an explicit jnp method (``"vanilla"``/``"direct"``/``"gather"``).
+    """
+    if _kernel_layout_ok(fleet.spec):
+        return resolve_lib.resolve_auto_stacked(fleet.l2, fleet.length,
+                                                page_ids)
+    return jax.vmap(resolve_lib.get_table_resolver("auto"))(
+        fleet.l2, fleet.length, page_ids.astype(jnp.int32)
+    )
+
 
 _RESOLVERS = {
     "vanilla": resolve_vanilla,
+    # "gather" names the implementation rather than the strategy: the
+    # vmapped-jnp walk, the baseline the benchmarks/tests compare the
+    # Pallas kernels against
+    "gather": resolve_vanilla,
     "direct": resolve_direct,
     "auto": resolve_auto,
+    "pallas_vanilla": resolve_pallas_vanilla,
+    "pallas_direct": resolve_pallas_direct,
 }
 
 
 def get_resolver(name: str):
+    """Look up a batched fleet resolver by method name.
+
+    Methods: ``"vanilla"`` (alias ``"gather"``) — vmapped O(chain) walk;
+    ``"direct"`` — vmapped O(1) lookup; ``"pallas_vanilla"`` /
+    ``"pallas_direct"`` — the same strategies as stacked Pallas kernels;
+    ``"auto"`` — per-page direct-where-trusted semantics, kernel-backed
+    when the layout qualifies. Every method returns a resolver with
+    signature ``(fleet, page_ids (T, B)) -> ResolveResult`` of (T, B)
+    leaves. Raises ``ValueError`` for unknown names.
+    """
     return resolve_lib.lookup_resolver(_RESOLVERS, name)
+
+
+def _uses_kernels(spec: FleetSpec, method: str) -> bool:
+    return (method in ("pallas_vanilla", "pallas_direct")
+            or (method == "auto" and _kernel_layout_ok(spec)))
 
 
 @partial(jax.jit, static_argnames=("method",))
 def read(fleet: ChainFleet, page_ids: jax.Array, *, method: str = "auto"):
-    """Batched whole-page read: (T, B) ids → ((T, B, page_size), result).
+    """Batched whole-page read across the fleet.
 
-    Unallocated or ZERO pages read as zeros, exactly as ``store.read``
-    (the gather is the same shared helper — the pool is global, so a
-    single gather serves the whole fleet).
+    Args:
+        fleet: the fleet state (untouched — reads are pure).
+        page_ids: (T, B) int32 logical page indices, one batch per tenant.
+        method: resolver method (see ``get_resolver``). The default
+            ``"auto"`` resolves each page direct-where-trusted and uses
+            the Pallas kernel data plane when the layout qualifies.
+
+    Returns:
+        ``(data, result)`` where ``data`` is (T, B, page_size) — the pool
+        is global, so one gather serves every tenant — and ``result`` is
+        the ``ResolveResult`` of (T, B) leaves the gather consumed.
+        Unallocated or ZERO pages read as zeros, exactly as
+        ``store.read``. Kernel methods gather through the stacked Pallas
+        gather of ``kernels/cow_gather``; jnp methods use the shared
+        ``store.gather_pages`` helper. Both are bit-identical.
     """
     from repro.core import store  # local import: store is the public API layer
 
     res = get_resolver(method)(fleet, page_ids)
+    if _uses_kernels(fleet.spec, method):
+        ok = res.found & ~res.zero
+        rows = jnp.where(ok, res.ptr, 0).astype(jnp.int32)
+        return cow_ops.gather_fleet(fleet.pool, rows, ok), res
     return store.gather_pages(fleet.pool, res), res
 
 
 def materialize(fleet: ChainFleet, *, method: str = "auto") -> jax.Array:
-    """Read every tenant's full virtual disk: (T, n_pages, page_size)."""
+    """Read every tenant's full virtual disk: (T, n_pages, page_size).
+
+    ``method`` is any ``get_resolver`` name; the fleet-wide 'dd' op.
+    """
     spec = fleet.spec
     ids = jnp.broadcast_to(
         jnp.arange(spec.n_pages, dtype=jnp.int32)[None, :],
@@ -445,18 +533,24 @@ def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
     maintenance over the stacked (T, C, P) layout, built on the same
     ``chain.merge_tables`` core so chain and fleet semantics cannot drift.
 
-    ``mask``: (T,) bool (or scalar) — which tenants to stream.
-    ``merge_upto``: int or (T,) int — per tenant, merge layers
-    ``[0, merge_upto]`` into the base. Tenants whose ``merge_upto`` does
-    not fall strictly below their active volume are skipped (a background
-    job must tolerate racing chain growth, where ``chain.stream`` raises).
+    Args:
+        fleet: the fleet state (returned updated, never mutated).
+        mask: (T,) bool, or a scalar broadcast over tenants — which
+            tenants to stream this call.
+        merge_upto: int or (T,) int — per tenant, merge layers
+            ``[0, merge_upto]`` into the base. Tenants whose
+            ``merge_upto`` does not fall strictly below their active
+            volume are skipped (a background job must tolerate racing
+            chain growth, where ``chain.stream`` raises).
+        reclaim: run the shared ``_reclaim`` repack afterwards (default).
+            Pass ``False`` for a metadata-only merge that frees nothing.
 
-    Data movement and row reclamation happen in the shared ``_reclaim``
-    repack (skippable via ``reclaim=False`` for metadata-only merges):
-    rows orphaned by the merge leave the tenant's lease footprint, freed
-    quanta return to the free list, ``overflow`` clears only for tenants
-    that actually shrank, and ``snap_dropped`` clears only where streaming
-    made room below ``max_chain``.
+    Returns:
+        The updated ``ChainFleet``. With ``reclaim=True``, rows orphaned
+        by the merge leave each tenant's lease footprint and freed quanta
+        return to the allocator free list; ``overflow`` clears only for
+        tenants that actually shrank, and ``snap_dropped`` clears only
+        where streaming made room below ``max_chain``.
     """
     spec = fleet.spec
     t = spec.n_tenants
@@ -502,8 +596,19 @@ def compact(fleet: ChainFleet, mask=None) -> ChainFleet:
     The fleet analogue of ``chain.compact_pool`` — COW writes and
     streaming orphan pool rows; this is the background job that hands
     them back so long-running fleets reach a steady state instead of
-    leaking the pool. ``overflow`` clears only for tenants whose rows
-    were actually reclaimed.
+    leaking the pool.
+
+    Args:
+        fleet: the fleet state (returned updated, never mutated).
+        mask: optional (T,) bool selecting which tenants to repack;
+            ``None`` (default) compacts every tenant.
+
+    Returns:
+        The updated ``ChainFleet``: selected tenants' live rows repacked
+        into their leading lease quanta, emptied quanta returned to the
+        free list, and ``overflow`` cleared only for tenants whose rows
+        were actually reclaimed (reclaiming nothing leaves the tenant as
+        wedged as before).
     """
     t = fleet.spec.n_tenants
     sel = (np.ones(t, bool) if mask is None

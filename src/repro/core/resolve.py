@@ -23,6 +23,14 @@ The actual lookup math lives in the ``*_tables`` helpers, which operate on
 bare ``(C, n_pages, 2)`` L2 arrays plus a chain length. The single-chain
 entry points are thin wrappers; ``core.fleet`` vmaps the same helpers over
 a stacked tenant axis, so one implementation serves both scales.
+
+A second implementation of each strategy lives in the Pallas kernels of
+``kernels/chain_resolve``: the ``resolve_*_stacked`` functions here run
+them over the whole stacked (T, C, P) fleet layout in one kernel launch
+(compiled on TPU, interpret mode elsewhere — CI exercises the kernel
+path on CPU). Single chains reach the same kernels through the
+``"pallas_vanilla"``/``"pallas_direct"`` registry entries, which view a
+chain as a one-tenant fleet. See ``docs/kernels.md``.
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import format as fmt
 from repro.core.chain import Chain
+from repro.kernels.chain_resolve import ops as _kernel_ops
 
 
 class ResolveResult(NamedTuple):
@@ -91,25 +100,17 @@ def resolve_direct_tables(l2: jax.Array, length: jax.Array,
     )
 
 
-def resolve_auto_tables(l2: jax.Array, length: jax.Array,
-                        page_ids: jax.Array) -> ResolveResult:
-    """Direct access where BFI_VALID, chain walk otherwise.
+def combine_auto(trust: jax.Array, direct: ResolveResult,
+                 walk: ResolveResult) -> ResolveResult:
+    """Field-wise pick of ``direct`` where ``trust`` else ``walk``.
 
-    This is what the sQEMU driver actually does on mixed images (paper
-    §5.1 backward compatibility): pages written by a vanilla tool lack the
-    extension bits and are resolved by walking; scalable pages are O(1).
+    ``trust`` must be "the active entry is allocated AND carries a valid
+    backing_file_index" — exactly ``direct.found``. Anything else
+    (allocated-without-bfi, or an empty active volume after a vanilla
+    snapshot) must fall back to the chain walk. Shared by the jnp and the
+    Pallas-kernel auto resolvers so the mixed-image semantics cannot
+    drift between implementations.
     """
-    direct = resolve_direct_tables(l2, length, page_ids)
-    active = length - 1
-    entries = jax.lax.dynamic_index_in_dim(l2, active, 0, keepdims=False)[
-        page_ids.astype(jnp.int32)
-    ]
-    # Trust the direct path iff the active entry is either scalable-valid
-    # or genuinely unallocated on a fully-scalable chain. Anything else
-    # (allocated-without-bfi, or an empty active volume after a vanilla
-    # snapshot) must walk.
-    trust = fmt.entry_bfi_valid(entries) & fmt.entry_allocated(entries)
-    walk = resolve_vanilla_tables(l2, length, page_ids)
     pick = lambda d, w: jnp.where(trust, d, w)
     return ResolveResult(
         owner=pick(direct.owner, walk.owner),
@@ -120,11 +121,101 @@ def resolve_auto_tables(l2: jax.Array, length: jax.Array,
     )
 
 
+def resolve_auto_tables(l2: jax.Array, length: jax.Array,
+                        page_ids: jax.Array) -> ResolveResult:
+    """Direct access where BFI_VALID, chain walk otherwise.
+
+    This is what the sQEMU driver actually does on mixed images (paper
+    §5.1 backward compatibility): pages written by a vanilla tool lack the
+    extension bits and are resolved by walking; scalable pages are O(1).
+    """
+    direct = resolve_direct_tables(l2, length, page_ids)
+    walk = resolve_vanilla_tables(l2, length, page_ids)
+    # direct.found is precisely the trust condition: the active entry is
+    # allocated and its backing_file_index is valid (scalable-written).
+    return combine_auto(direct.found, direct, walk)
+
+
 _TABLE_RESOLVERS = {
     "vanilla": resolve_vanilla_tables,
     "direct": resolve_direct_tables,
     "auto": resolve_auto_tables,
 }
+
+
+# -- Pallas-kernel resolvers over the stacked (T, C, P, 2) fleet layout ------
+
+
+def resolve_vanilla_stacked(l2: jax.Array, lengths: jax.Array,
+                            page_ids: jax.Array) -> ResolveResult:
+    """Kernel-backed first-hit walk for a whole fleet in one launch.
+
+    ``l2``: (T, C, n_pages, 2) uint32 stacked tables; ``lengths``: (T,);
+    ``page_ids``: (T, B). The kernel resolves every tenant's *full* page
+    table (the walk cost is amortized across the read batch); the batch's
+    owners/pointers are then a cheap per-tenant gather. Results are
+    bit-identical to ``resolve_vanilla_tables`` vmapped over tenants.
+    """
+    ids = page_ids.astype(jnp.int32)
+    owner_map, hit_map = _kernel_ops.resolve_vanilla_fleet(l2[..., 0], lengths)
+    owner = jnp.take_along_axis(owner_map, ids, axis=1)
+    hit = jnp.take_along_axis(hit_map, ids, axis=1)
+    found = owner >= 0
+    ln = lengths.astype(jnp.int32)[:, None]
+    return ResolveResult(
+        owner=owner.astype(jnp.int32),
+        ptr=hit & jnp.uint32(fmt.PTR_MASK),
+        found=found,
+        # a miss returns hit == 0, so the ZERO bit reads as False there
+        zero=(hit & jnp.uint32(fmt.FLAG_ZERO)) != 0,
+        lookups=jnp.where(found, ln - owner, ln).astype(jnp.int32),
+    )
+
+
+def resolve_direct_stacked(l2: jax.Array, lengths: jax.Array,
+                           page_ids: jax.Array) -> ResolveResult:
+    """Kernel-backed direct access for a whole fleet in one launch.
+
+    Same contract as ``resolve_vanilla_stacked`` but O(1) per page: the
+    kernel's BlockSpec stages only each tenant's active layer (picked by
+    the prefetched ``lengths``). Bit-identical to
+    ``resolve_direct_tables`` vmapped over tenants.
+    """
+    ids = page_ids.astype(jnp.int32)
+    owner_map, h0_map, h1_map = _kernel_ops.resolve_direct_fleet(
+        l2[..., 0], l2[..., 1], lengths
+    )
+    owner = jnp.take_along_axis(owner_map, ids, axis=1)
+    h0 = jnp.take_along_axis(h0_map, ids, axis=1)
+    h1 = jnp.take_along_axis(h1_map, ids, axis=1)
+    alloc = (h0 & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0
+    return ResolveResult(
+        owner=owner.astype(jnp.int32),
+        ptr=h0 & jnp.uint32(fmt.PTR_MASK),
+        found=alloc & ((h1 & jnp.uint32(fmt.FLAG_BFI_VALID)) != 0),
+        zero=((h0 & jnp.uint32(fmt.FLAG_ZERO)) != 0) & alloc,
+        lookups=jnp.ones_like(ids),
+    )
+
+
+def resolve_auto_stacked(l2: jax.Array, lengths: jax.Array,
+                         page_ids: jax.Array) -> ResolveResult:
+    """Kernel-backed mixed-image resolution: both kernels, then the same
+    ``combine_auto`` trust pick as the jnp auto resolver."""
+    direct = resolve_direct_stacked(l2, lengths, page_ids)
+    walk = resolve_vanilla_stacked(l2, lengths, page_ids)
+    return combine_auto(direct.found, direct, walk)
+
+
+def _stacked_as_chain(fn):
+    """Run a stacked kernel resolver on a single chain (a 1-tenant fleet)."""
+
+    @jax.jit
+    def resolver(chain: Chain, page_ids: jax.Array) -> ResolveResult:
+        res = fn(chain.l2[None], chain.length[None], page_ids[None])
+        return ResolveResult(*(leaf[0] for leaf in res))
+
+    return resolver
 
 
 @jax.jit
@@ -146,6 +237,10 @@ _RESOLVERS = {
     "vanilla": resolve_vanilla,
     "direct": resolve_direct,
     "auto": resolve_auto,
+    # kernel-backed paths (interpret mode off-TPU): a chain is a 1-tenant
+    # fleet, so the stacked Pallas kernels serve single chains too
+    "pallas_vanilla": _stacked_as_chain(resolve_vanilla_stacked),
+    "pallas_direct": _stacked_as_chain(resolve_direct_stacked),
 }
 
 

@@ -5,15 +5,31 @@ being streamed: the maintenance job competes with the guest for the data
 path. Fleet-side, the equivalent anti-pattern is stop-the-world
 maintenance — stream every tenant at once and eat one enormous tick.
 
-The scheduler is the provider's background job queue instead: each
-``tick()`` (driven by the serving loop between decode steps, see
-``serve/engine.py``) streams at most ``max_tenants_per_tick`` tenants,
-picked by occupancy — longest chains first (they pay the worst Eq. 1
-walk cost and pin the most superseded rows), heaviest row footprint as
-the tie-break. Streaming returns freed quanta to the fleet allocator's
-free list (``fleet.stream_tenants``), and tenants that stay wedged
-(``overflow`` after streaming reclaimed nothing) trigger a fleet-wide
-``compact``. ``benchmarks/maintenance.py`` measures the amortization.
+The scheduler is the provider's background job queue instead.
+
+**Tick budgeting.** Each ``tick()`` (driven by the serving loop between
+decode steps, see ``serve/engine.py``) streams at most
+``max_tenants_per_tick`` tenants, picked by occupancy — longest chains
+first (they pay the worst Eq. 1 walk cost and pin the most superseded
+rows), heaviest row footprint as the tie-break; chains shorter than
+``stream_chain_threshold`` are left alone unless they are under
+``overflow``/``snap_dropped`` pressure. The budget is what converts one
+enormous stop-the-world pause into many small slices: the worst-case
+tick cost is bounded by the budget, not the backlog
+(``benchmarks/maintenance.py`` measures the amortization). Streaming
+returns freed quanta to the fleet allocator's free list
+(``fleet.stream_tenants``), and tenants that stay wedged (``overflow``
+after streaming reclaimed nothing) trigger a targeted ``compact``.
+
+**No-progress parking.** A tick that touches a tenant without changing
+its occupancy fingerprint (chain length, rows held, quanta held) parks
+that tenant: it is skipped by future ticks until something about it
+changes (a write, a snapshot, a reclamation elsewhere). Without parking,
+a length-2 chain (streaming shortens nothing) or a latched overflow with
+nothing reclaimable would be re-picked and futilely re-streamed every
+tick, and ``drain()`` would never observe an empty backlog. Parking is
+what makes the queue converge; progress anywhere un-parks automatically
+because the fingerprint no longer matches.
 """
 
 from __future__ import annotations

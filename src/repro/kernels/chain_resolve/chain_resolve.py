@@ -1,15 +1,19 @@
-"""Pallas TPU kernels for chain resolution.
+"""Pallas TPU kernels for chain resolution — single-chain and fleet layouts.
 
-The vanilla path is the paper's chain walk recast for a TPU: instead of a
-pointer chase per request (host Qemu), a *batch* of page ids is resolved by
-a first-hit reduction over the chain axis. The allocation bitmap tile
-(C × Tn) is staged HBM→VMEM by the BlockSpec; the chain axis is reduced
-in-kernel with a fori loop, so the bytes-touched cost remains O(C) per
-page — faithfully the vanilla cost model. The direct kernel touches one
-layer: O(1).
+The vanilla path is the paper's chain walk recast for a TPU: a first-hit
+reduction over the chain axis instead of a per-request pointer chase, with
+bytes-touched cost O(C) per page. The direct kernel touches one layer:
+O(1). The ``*_fleet_pallas`` entry points extend both to the stacked
+(T, C, P) multi-tenant layout of ``core.fleet``: the grid runs over the
+tenant axis, per-tenant chain ``length`` is prefetched as a scalar (the
+direct kernel's BlockSpec index_map uses it to stage *only* each tenant's
+active layer), and the fleet kernels consume the packed L2 words of
+``core.format`` directly — the kernel reads the actual table format, as
+the paper's sQemu data plane does.
 
-Tiling: pages are tiled along the lane dimension (multiples of 128); the
-chain axis lives in the sublane dimension of the same VMEM tile.
+See ``docs/kernels.md`` for the full cost model, tiling constraints
+(pages on the 128-lane axis, chain axis in sublanes) and the
+interpret-mode CI story.
 """
 
 from __future__ import annotations
@@ -20,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import format as fmt
 
 PAGE_TILE = 512  # lanes per grid step (4 × 128)
 
@@ -104,3 +110,111 @@ def resolve_direct_pallas(alloc_active, bfi_active, ptrs_active, *,
     )(alloc_active.astype(jnp.uint32)[None], bfi_active.astype(jnp.uint32)[None],
       ptrs_active.astype(jnp.uint32)[None])
     return owner[0], ptr[0]
+
+
+# -- stacked (T, C, P) fleet layout ------------------------------------------
+
+
+def _vanilla_fleet_kernel(length_ref, w0_ref, owner_ref, hit_ref):
+    c = w0_ref.shape[1]
+    width = w0_ref.shape[2]
+    length = length_ref[pl.program_id(0)]
+
+    owner = jnp.full((1, width), -1, jnp.int32)
+    hit = jnp.zeros((1, width), jnp.uint32)
+
+    def body(i, carry):
+        owner, hit = carry
+        # walk from the tenant's active volume (length-1) downwards
+        layer = length - 1 - i
+        valid = (layer >= 0) & (layer < c)
+        idx = jnp.maximum(layer, 0)
+        w = w0_ref[0, idx, :]
+        a = (w & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0
+        first = a & valid & (owner[0] < 0)
+        owner = owner.at[0].set(jnp.where(first, layer, owner[0]))
+        hit = hit.at[0].set(jnp.where(first, w, hit[0]))
+        return owner, hit
+
+    owner, hit = jax.lax.fori_loop(0, c, body, (owner, hit))
+    owner_ref[...] = owner
+    hit_ref[...] = hit
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def resolve_vanilla_fleet_pallas(w0, lengths, *, interpret: bool = True):
+    """Stacked first-hit chain walk over every tenant's full page table.
+
+    ``w0``: (T, C, P) uint32 — packed L2 word0 (``core.format`` layout:
+    ALLOCATED/ZERO flags + pool ptr); ``lengths``: (T,) int32. P should be
+    a multiple of 128 (``ops.resolve_vanilla_fleet`` pads).
+
+    Returns ``(owner (T, P) int32 [-1 if absent], hit (T, P) uint32)``
+    where ``hit`` is the owning layer's raw word0 (0 where absent).
+    """
+    t, c, p = w0.shape
+    tile = min(PAGE_TILE, p)
+    owner, hit = pl.pallas_call(
+        _vanilla_fleet_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(t, pl.cdiv(p, tile)),
+            in_specs=[
+                pl.BlockSpec((1, c, tile), lambda ti, pi, ln: (ti, 0, pi)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, tile), lambda ti, pi, ln: (ti, pi)),
+                pl.BlockSpec((1, tile), lambda ti, pi, ln: (ti, pi)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((t, p), jnp.int32),
+            jax.ShapeDtypeStruct((t, p), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), w0.astype(jnp.uint32))
+    return owner, hit
+
+
+def _direct_fleet_kernel(length_ref, w0_ref, w1_ref, owner_ref, h0_ref, h1_ref):
+    w0 = w0_ref[0, 0, :]
+    w1 = w1_ref[0, 0, :]
+    alloc = (w0 & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0
+    bfi = (w1 & jnp.uint32(fmt.BFI_MASK)).astype(jnp.int32)
+    owner_ref[...] = jnp.where(alloc, bfi, -1)[None]
+    h0_ref[...] = w0[None]
+    h1_ref[...] = w1[None]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def resolve_direct_fleet_pallas(w0, w1, lengths, *, interpret: bool = True):
+    """Stacked sQEMU direct access: one layer per tenant, picked by the
+    BlockSpec index_map from the prefetched ``lengths`` — only each
+    tenant's active layer is ever staged into VMEM, so the bytes-touched
+    cost is O(1) per page regardless of chain length.
+
+    ``w0``/``w1``: (T, C, P) uint32 packed L2 words; ``lengths``: (T,).
+
+    Returns ``(owner (T, P) int32 [-1 if unallocated], h0 (T, P) uint32,
+    h1 (T, P) uint32)`` — the active layer's raw entry words.
+    """
+    t, c, p = w0.shape
+    tile = min(PAGE_TILE, p)
+    in_spec = pl.BlockSpec((1, 1, tile), lambda ti, pi, ln: (ti, ln[ti] - 1, pi))
+    out_spec = pl.BlockSpec((1, tile), lambda ti, pi, ln: (ti, pi))
+    owner, h0, h1 = pl.pallas_call(
+        _direct_fleet_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(t, pl.cdiv(p, tile)),
+            in_specs=[in_spec, in_spec],
+            out_specs=[out_spec, out_spec, out_spec],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((t, p), jnp.int32),
+            jax.ShapeDtypeStruct((t, p), jnp.uint32),
+            jax.ShapeDtypeStruct((t, p), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), w0.astype(jnp.uint32), w1.astype(jnp.uint32))
+    return owner, h0, h1

@@ -1,4 +1,11 @@
-"""Jitted wrappers for chain resolution: Pallas on TPU, oracle elsewhere."""
+"""Jitted wrappers for chain resolution.
+
+Single-chain wrappers dispatch Pallas on TPU and the jnp oracle elsewhere.
+The fleet (``*_fleet``) wrappers *always* run the Pallas kernel — compiled
+on TPU, interpret mode elsewhere — so CPU CI exercises the exact kernel
+code path (the oracles in ``ref.py`` stay the independent pin the test
+suite compares against).
+"""
 
 from __future__ import annotations
 
@@ -7,7 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels.chain_resolve import ref
 from repro.kernels.chain_resolve.chain_resolve import (
+    resolve_direct_fleet_pallas,
     resolve_direct_pallas,
+    resolve_vanilla_fleet_pallas,
     resolve_vanilla_pallas,
 )
 
@@ -43,3 +52,22 @@ def resolve_direct(alloc_active, bfi_active, ptrs_active):
         owner, ptr = resolve_direct_pallas(a, b, p, interpret=False)
         return owner[:n], ptr[:n]
     return ref.resolve_direct_ref(alloc_active, bfi_active, ptrs_active)
+
+
+def resolve_vanilla_fleet(w0, lengths):
+    """Stacked (T, C, P) chain walk. Always the Pallas kernel (interpret
+    off-TPU); pads the page axis to a 128-lane multiple."""
+    w0_p, n = _pad_pages(w0)
+    owner, hit = resolve_vanilla_fleet_pallas(w0_p, lengths,
+                                              interpret=not _on_tpu())
+    return owner[:, :n], hit[:, :n]
+
+
+def resolve_direct_fleet(w0, w1, lengths):
+    """Stacked (T, C, P) direct lookup of each tenant's active layer.
+    Always the Pallas kernel (interpret off-TPU); pads the page axis."""
+    w0_p, n = _pad_pages(w0)
+    w1_p, _ = _pad_pages(w1)
+    owner, h0, h1 = resolve_direct_fleet_pallas(w0_p, w1_p, lengths,
+                                                interpret=not _on_tpu())
+    return owner[:, :n], h0[:, :n], h1[:, :n]

@@ -1,8 +1,11 @@
-"""Pure-jnp oracle for chain resolution (vanilla first-hit scan + direct)."""
+"""Pure-jnp oracle for chain resolution (vanilla first-hit scan + direct),
+for both the single-chain (C, N) and the stacked fleet (T, C, P) layouts."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core import format as fmt
 
 
 def resolve_vanilla_ref(alloc, ptrs, length):
@@ -32,3 +35,40 @@ def resolve_direct_ref(alloc_active, bfi_active, ptrs_active):
     owner = jnp.where(alloc_active != 0, bfi_active.astype(jnp.int32), -1)
     ptr = jnp.where(alloc_active != 0, ptrs_active, 0)
     return owner.astype(jnp.int32), ptr.astype(jnp.uint32)
+
+
+def resolve_vanilla_fleet_ref(w0, lengths):
+    """Stacked first-hit walk over packed word0 tables.
+
+    w0: (T, C, P) uint32 — L2 word0 per ``core.format``.
+    lengths: (T,) int32 — per-tenant live chain length.
+
+    Returns (owner (T, P) int32 [-1 if absent], hit (T, P) uint32 — the
+    owning layer's raw word0, 0 where absent).
+    """
+    c = w0.shape[1]
+    layers = jnp.arange(c, dtype=jnp.int32)[None, :, None]
+    live = layers < lengths[:, None, None]
+    alloc = ((w0 & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0) & live
+    owner = jnp.max(jnp.where(alloc, layers, -1), axis=1)     # (T, P)
+    hit = jnp.take_along_axis(w0, jnp.maximum(owner, 0)[:, None, :],
+                              axis=1)[:, 0]
+    hit = jnp.where(owner >= 0, hit, jnp.uint32(0))
+    return owner.astype(jnp.int32), hit.astype(jnp.uint32)
+
+
+def resolve_direct_fleet_ref(w0, w1, lengths):
+    """Stacked direct access: each tenant's active layer, one lookup.
+
+    w0/w1: (T, C, P) uint32 packed L2 words; lengths: (T,) int32.
+
+    Returns (owner (T, P) int32 [-1 if unallocated], h0 (T, P) uint32,
+    h1 (T, P) uint32 — the active layer's raw entry words).
+    """
+    active = (lengths.astype(jnp.int32) - 1)[:, None, None]
+    h0 = jnp.take_along_axis(w0, active, axis=1)[:, 0]        # (T, P)
+    h1 = jnp.take_along_axis(w1, active, axis=1)[:, 0]
+    alloc = (h0 & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0
+    bfi = (h1 & jnp.uint32(fmt.BFI_MASK)).astype(jnp.int32)
+    owner = jnp.where(alloc, bfi, -1)
+    return owner.astype(jnp.int32), h0.astype(jnp.uint32), h1.astype(jnp.uint32)

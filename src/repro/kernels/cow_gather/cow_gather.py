@@ -44,3 +44,43 @@ def gather_pallas(pool, rows, found, *, interpret: bool = True):
         interpret=interpret,
     )(safe_rows, found.astype(jnp.int32), pool)
     return out
+
+
+def _gather_fleet_kernel(rows_ref, found_ref, pool_ref, out_ref):
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    ok = found_ref[t, i] != 0
+    out_ref[...] = jnp.where(
+        ok, pool_ref[...], jnp.zeros_like(pool_ref[...])
+    )[None]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_fleet_pallas(pool, rows, found, *, interpret: bool = True):
+    """Stacked fleet gather: the pool is global, so one kernel serves every
+    tenant. ``pool``: (R, P); ``rows``/``found``: (T, B) → (T, B, P).
+
+    Same scalar-prefetch pattern as the single-chain gather, with a
+    (tenant, request) grid: each grid step's index_map picks the pool row
+    for one tenant's request out of the prefetched (T, B) row table.
+    """
+    r, p = pool.shape
+    t, b = rows.shape
+    safe_rows = jnp.where(found, rows, 0).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t, b),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda ti, bi, rows_ref, found_ref:
+                         (rows_ref[ti, bi], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, p), lambda ti, bi, rows_ref, found_ref:
+                               (ti, bi, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_fleet_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, b, p), pool.dtype),
+        interpret=interpret,
+    )(safe_rows, found.astype(jnp.int32), pool)
+    return out

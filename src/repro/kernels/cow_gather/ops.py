@@ -1,4 +1,10 @@
-"""Jitted wrapper: full read path = resolve + gather."""
+"""Jitted wrapper: full read path = resolve + gather.
+
+``gather`` (single chain) dispatches Pallas on TPU and the jnp oracle
+elsewhere; ``gather_fleet`` always runs the Pallas kernel (interpret mode
+off-TPU) so CPU CI exercises the kernel path — ``ref.gather_fleet_ref``
+stays the independent oracle.
+"""
 
 from __future__ import annotations
 
@@ -6,14 +12,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cow_gather import ref
-from repro.kernels.cow_gather.cow_gather import gather_pallas
+from repro.kernels.cow_gather.cow_gather import gather_fleet_pallas, gather_pallas
+
+
+def _pad_pool(pool):
+    p = pool.shape[1]
+    pad = (-p) % 128
+    return (jnp.pad(pool, ((0, 0), (0, pad))) if pad else pool), p
 
 
 def gather(pool, rows, found):
     if jax.default_backend() == "tpu":
-        p = pool.shape[1]
-        pad = (-p) % 128
-        pool_p = jnp.pad(pool, ((0, 0), (0, pad))) if pad else pool
+        pool_p, p = _pad_pool(pool)
         out = gather_pallas(pool_p, rows, found, interpret=False)
         return out[:, :p]
     return ref.gather_ref(pool, rows, found)
+
+
+def gather_fleet(pool, rows, found):
+    """Fleet read gather: (R, P) pool + (T, B) rows/found → (T, B, P).
+    Always the Pallas kernel (interpret off-TPU); pads the page axis."""
+    pool_p, p = _pad_pool(pool)
+    out = gather_fleet_pallas(
+        pool_p, rows, found, interpret=jax.default_backend() != "tpu"
+    )
+    return out[..., :p]

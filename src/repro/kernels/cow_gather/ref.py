@@ -13,3 +13,14 @@ def gather_ref(pool, rows, found):
     safe = jnp.where(found, rows, 0).astype(jnp.int32)
     data = pool[safe]
     return jnp.where(found[:, None], data, jnp.zeros_like(data))
+
+
+def gather_fleet_ref(pool, rows, found):
+    """pool: (R, P); rows: (T, B) int32; found: (T, B) bool → (T, B, P).
+
+    The pool is global across tenants, so the fleet gather is one fancy
+    index — unresolved pages read as zeros, as in the single-chain case.
+    """
+    safe = jnp.where(found, rows, 0).astype(jnp.int32)
+    data = pool[safe]
+    return jnp.where(found[..., None], data, jnp.zeros_like(data))

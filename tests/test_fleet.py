@@ -8,6 +8,12 @@ mirror scripted (and, with hypothesis, random) op sequences onto both
 representations and compare them field-for-field. Pool row *pointers* are
 the one legitimate difference (shared leased pool vs private linear
 pools), so data equality is checked through reads, not ptrs.
+
+Every equivalence check runs over all resolver methods — the vmapped jnp
+gather ("vanilla"/"gather"/"direct"/"auto") *and* the stacked Pallas
+kernels ("pallas_vanilla"/"pallas_direct", interpret mode on CPU) — each
+pinned against the same single-chain jnp oracle, so the kernel and gather
+implementations cannot drift apart.
 """
 
 import jax.numpy as jnp
@@ -16,7 +22,15 @@ import pytest
 
 from repro.core import fleet, store
 
-METHODS = ("vanilla", "direct", "auto")
+#: fleet resolver method → the single-chain oracle method it must match
+METHODS = {
+    "vanilla": "vanilla",
+    "gather": "vanilla",            # alias: the vmapped-jnp implementation
+    "direct": "direct",
+    "auto": "auto",
+    "pallas_vanilla": "vanilla",    # stacked kernel, walk semantics
+    "pallas_direct": "direct",      # stacked kernel, direct semantics
+}
 N_PAGES, PAGE, MAXC = 64, 4, 8
 
 
@@ -73,12 +87,12 @@ def assert_equivalent(fl, chains):
         np.asarray(fl.length), [int(c.length) for c in chains])
     ids = jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None],
                            (t, N_PAGES))
-    for method in METHODS:
+    for method, oracle in METHODS.items():
         fr = fleet.get_resolver(method)(fl, ids)
         fdata, _ = fleet.read(fl, ids, method=method)
         for i, ch in enumerate(chains):
             cdata, cr = store.read(ch, jnp.arange(N_PAGES, dtype=jnp.int32),
-                                   method=method)
+                                   method=oracle)
             for field in ("owner", "found", "zero", "lookups"):
                 np.testing.assert_array_equal(
                     np.asarray(getattr(fr, field)[i]),
@@ -121,6 +135,59 @@ def test_vanilla_tenants_walk_scalable_go_direct():
     assert np.all(lookups[0][found[0]] == 1)        # scalable: O(1)
     assert np.all(lookups[1][found[1]] == 5)        # vanilla: walks 5 layers
     assert_equivalent(fl, chains)
+
+
+def test_pallas_methods_ragged_and_inactive_tenants():
+    """Kernel resolvers over a fleet with ragged chain lengths and an
+    inactive tenant (never written, length 1 — its direct kernel stages
+    an empty active volume and its walk kernel must find nothing)."""
+    scalable = [True, False, True, True]
+    ops = [
+        ("write", [1, 1, 1, 0], 0),
+        ("snapshot", [1, 0, 1, 0], None),
+        ("write", [1, 0, 1, 0], 1),
+        ("snapshot", [1, 1, 0, 0], None),
+        ("write", [1, 1, 0, 0], 2),
+    ]
+    fl, chains = apply_ops(ops, scalable)
+    assert np.asarray(fl.length).tolist() == [3, 2, 2, 1]
+    assert_equivalent(fl, chains)
+    # the untouched tenant resolves to nothing on every kernel path
+    ids = jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None], (4, N_PAGES))
+    for method in ("pallas_vanilla", "pallas_direct"):
+        res = fleet.get_resolver(method)(fl, ids)
+        assert not np.asarray(res.found[3]).any()
+
+
+def test_auto_uses_kernels_on_aligned_layout():
+    """n_pages % 128 == 0 qualifies the layout: method="auto" resolves
+    through the stacked kernels, bit-identical to the vmapped jnp auto."""
+    import jax
+
+    from repro.core import resolve as resolve_lib
+
+    spec = fleet.FleetSpec(
+        n_tenants=2, n_pages=128, page_size=PAGE, max_chain=4,
+        pool_capacity=256, lease_quantum=32, l2_per_table=32,
+    )
+    assert fleet._kernel_layout_ok(spec)
+    fl = fleet.create(spec, scalable=jnp.asarray([True, False]))
+    ids8 = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+    fl = fleet.write(fl, ids8, jnp.ones((2, 8, PAGE)))
+    fl = fleet.snapshot(fl)
+    fl = fleet.write(fl, 8 + ids8, 2.0 * jnp.ones((2, 8, PAGE)))
+    ids = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
+    got = fleet.resolve_auto(fl, ids)
+    want = jax.vmap(resolve_lib.get_table_resolver("auto"))(
+        fl.l2, fl.length, ids)
+    for field in got._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
+            err_msg=f"auto field {field}")
+    data, res = fleet.read(fl, ids, method="auto")   # kernel gather path
+    np.testing.assert_allclose(
+        np.asarray(data),
+        np.asarray(store.gather_pages(fl.pool, res)), rtol=1e-6)
 
 
 def test_lease_exhaustion_isolated_per_tenant():

@@ -5,11 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import format as fmt
 from repro.kernels.chain_resolve import ref as cr_ref
 from repro.kernels.chain_resolve.chain_resolve import (
-    resolve_direct_pallas, resolve_vanilla_pallas)
+    resolve_direct_fleet_pallas, resolve_direct_pallas,
+    resolve_vanilla_fleet_pallas, resolve_vanilla_pallas)
 from repro.kernels.cow_gather import ref as cg_ref
-from repro.kernels.cow_gather.cow_gather import gather_pallas
+from repro.kernels.cow_gather.cow_gather import gather_fleet_pallas, gather_pallas
 from repro.kernels.paged_attention import ref as pa_ref
 from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
 from repro.kernels.stream_merge import ref as sm_ref
@@ -40,6 +42,55 @@ def test_chain_resolve_direct_sweep(n):
     o2, p2 = resolve_direct_pallas(alloc, bfi, ptrs, interpret=True)
     np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def _packed_fleet_words(key, t, c, p, density):
+    """Random stacked L2 word pairs in the real ``core.format`` layout."""
+    ks = [jax.random.fold_in(key, i) for i in range(5)]
+    entries = fmt.pack_entry(
+        jax.random.randint(ks[0], (t, c, p), 0, 10_000).astype(jnp.uint32),
+        jax.random.randint(ks[1], (t, c, p), 0, c).astype(jnp.uint32),
+        allocated=jax.random.uniform(ks[2], (t, c, p)) < density,
+        bfi_valid=jax.random.uniform(ks[3], (t, c, p)) < 0.7,
+        zero=jax.random.uniform(ks[4], (t, c, p)) < 0.1,
+    )
+    return entries[..., 0], entries[..., 1]
+
+
+@pytest.mark.parametrize("t,c,p", [(1, 1, 128), (3, 7, 256), (5, 16, 640),
+                                   (2, 64, 128)])
+@pytest.mark.parametrize("density", [0.05, 0.5, 1.0])
+def test_chain_resolve_vanilla_fleet_sweep(t, c, p, density):
+    key = jax.random.fold_in(KEY, t * c * p)
+    w0, _ = _packed_fleet_words(key, t, c, p, density)
+    # ragged lengths, including the length-1 (nothing-below-active) tenant
+    lengths = jax.random.randint(jax.random.fold_in(key, 9), (t,), 1, c + 1)
+    o1, h1 = cr_ref.resolve_vanilla_fleet_ref(w0, lengths)
+    o2, h2 = resolve_vanilla_fleet_pallas(w0, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+@pytest.mark.parametrize("t,c,p", [(1, 1, 128), (4, 9, 256), (3, 32, 640)])
+def test_chain_resolve_direct_fleet_sweep(t, c, p):
+    key = jax.random.fold_in(KEY, t * c * p + 1)
+    w0, w1 = _packed_fleet_words(key, t, c, p, 0.6)
+    lengths = jax.random.randint(jax.random.fold_in(key, 9), (t,), 1, c + 1)
+    r1 = cr_ref.resolve_direct_fleet_ref(w0, w1, lengths)
+    r2 = resolve_direct_fleet_pallas(w0, w1, lengths, interpret=True)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,page,t,b", [(16, 128, 2, 8), (64, 256, 5, 17)])
+def test_cow_gather_fleet_sweep(dtype, rows, page, t, b):
+    pool = jax.random.normal(KEY, (rows, page)).astype(dtype)
+    idx = jax.random.randint(KEY, (t, b), 0, rows)
+    found = jax.random.uniform(jax.random.fold_in(KEY, 1), (t, b)) < 0.8
+    o1 = cg_ref.gather_fleet_ref(pool, idx, found)
+    o2 = gather_fleet_pallas(pool, idx, found, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

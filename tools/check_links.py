@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Verify that relative markdown links in the repo resolve to real files.
+
+Scans every tracked-tree ``*.md`` (skipping hidden and cache dirs) for
+inline links/images ``[text](target)``, resolves each relative target
+against the containing file's directory, and fails if any target is
+missing — so the docs tree cannot rot silently. External schemes
+(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+skipped; a ``file.md#section`` target is checked for the file only
+(anchor names are not validated). Stdlib only; run from anywhere:
+
+    python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", "node_modules",
+             ".pytest_cache", "results"}
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS or part.startswith(".")
+               for part in path.relative_to(root).parts[:-1]):
+            continue
+        yield path
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(
+                f"{path.relative_to(root)}:{line}: broken link -> {target}"
+            )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path.cwd()
+    errors = []
+    n_files = 0
+    for md in iter_markdown(root):
+        n_files += 1
+        errors.extend(check_file(md, root))
+    for err in errors:
+        print(err)
+    print(f"checked {n_files} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
