@@ -1,0 +1,172 @@
+"""Serving-plane benchmark: fleet-backed decode-step prep vs host numpy.
+
+``Engine.step()`` spends its non-model time materializing block tables
+and COW-preparing write slots. This benchmark times exactly that half of
+the step, per (fork format × fork depth) cell, over a batch of live
+leaves at the bottom of a fork chain:
+
+* ``host``  — the seed engine's data path: TWO numpy chain walks per
+  sequence per step (one for the COW-prepare decision, one for the
+  table), assembled on the host (``PagedKVCache._resolve_oracle``);
+* ``fleet`` — ``PagedKVCache.prepare_step``: ONE stacked fleet resolve
+  for the whole batch (``resolve_*_stacked`` — the Pallas kernel plane
+  on lane-aligned pools, the vmapped gather otherwise), one batched COW
+  stamp, one stacked host→device transfer.
+
+The chain is built by fork→append→retire-parent rounds, so a depth-*d*
+cell resolves through *d* tombstoned ancestors — the paper's Eq. 1
+regime (vanilla cost grows with depth, scalable stays O(1)). Both paths
+run on an identical settled cache and the produced tables are verified
+bit-identical per cell before timing.
+
+Run: ``PYTHONPATH=src python benchmarks/serve.py --json BENCH_serve.json``
+(see ``docs/benchmarks.md`` for the JSON schema).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import emit, emit_json, time_fn
+except ModuleNotFoundError:  # invoked as `python benchmarks/serve.py`
+    import pathlib
+    import sys
+
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
+    from benchmarks.common import emit, emit_json, time_fn
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+
+
+def build_forked_cache(depth: int, *, scalable: bool, batch: int,
+                       block_size: int, max_blocks: int, n_blocks: int,
+                       resolver: str, prompt_tokens: int = 64):
+    """A cache with ``batch`` live leaves under a fork chain of ``depth``
+    retired ancestors, every generation owning one divergent token."""
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=8,
+                        block_size=block_size, n_blocks=n_blocks,
+                        max_blocks_per_seq=max_blocks, dtype=jnp.float32)
+    kv = PagedKVCache(cfg, scalable=scalable, resolver=resolver)
+    one = jnp.ones((1, 1, 1, 8), jnp.float32)
+
+    sid = kv.new_seq()
+    k = jnp.ones((1, prompt_tokens, 1, 8), jnp.float32)
+    kv.append_prefill(sid, k, k)
+    for _ in range(depth):
+        child = kv.fork(sid)
+        kv.append(child, one[:, 0], one[:, 0])   # each layer owns a block
+        kv.free_seq(sid)                         # tombstone the ancestor
+        sid = child
+    leaves = [sid]
+    for _ in range(batch - 1):
+        leaf = kv.fork(sid)
+        kv.append(leaf, one[:, 0], one[:, 0])
+        leaves.append(leaf)
+    return kv, sorted(leaves)
+
+
+def host_step_prep(kv: PagedKVCache, sids, pad_to: int, pad_block: int):
+    """The seed engine's step prep: per-sequence host walks + host-side
+    assembly. One walk decides the COW-prepare (a no-op on the settled
+    cache, exactly like the fleet path's), one materializes the table."""
+    bs = kv.cfg.block_size
+    for sid in sids:
+        seq = kv._seqs[sid]
+        blk = seq.length // bs
+        table, owner, _ = kv._resolve_oracle(sid)          # prepare walk
+        assert table[blk] >= 0 and seq.owner[blk] == sid   # settled: no-op
+    n = max(len(sids), pad_to)
+    tables = np.full((n, kv.cfg.max_blocks_per_seq), pad_block, np.int32)
+    lengths = np.zeros(n, np.int32)
+    for i, sid in enumerate(sids):
+        table, _, _ = kv._resolve_oracle(sid)              # table walk
+        tables[i] = np.where(table >= 0, table, pad_block)
+        lengths[i] = kv._seqs[sid].length
+    return jnp.asarray(tables), jnp.asarray(lengths)
+
+
+def bench_cell(depth: int, scalable: bool, args) -> dict:
+    kv, sids = build_forked_cache(
+        depth, scalable=scalable, batch=args.batch,
+        block_size=args.block_size, max_blocks=args.blocks_per_seq,
+        n_blocks=args.n_blocks, resolver=args.resolver,
+    )
+    pad_block = kv.reserve_block()
+    pad_to = 1
+    while pad_to < len(sids):
+        pad_to *= 2
+
+    # settle: every leaf's write slot gets prepared once, so both timed
+    # paths are pure reads over identical state
+    fleet_fn = lambda: kv.prepare_step(sids, pad_to=pad_to,
+                                       pad_block=pad_block)
+    host_fn = lambda: host_step_prep(kv, sids, pad_to, pad_block)
+    f_tables, f_lengths = fleet_fn()
+    h_tables, h_lengths = host_fn()
+    np.testing.assert_array_equal(np.asarray(f_tables), np.asarray(h_tables))
+    np.testing.assert_array_equal(np.asarray(f_lengths), np.asarray(h_lengths))
+
+    t_fleet = time_fn(fleet_fn, warmup=1, iters=args.iters)
+    t_host = time_fn(host_fn, warmup=1, iters=args.iters)
+    fmt_name = "scalable" if scalable else "vanilla"
+    emit(f"serve_step_{fmt_name}_depth{depth}", t_fleet * 1e6,
+         f"host_us={t_host * 1e6:.0f};fleet_us={t_fleet * 1e6:.0f};"
+         f"speedup={t_host / t_fleet:.2f}x;batch={len(sids)}")
+    return dict(
+        section="serve_step",
+        format=fmt_name,
+        depth=depth,
+        batch=len(sids),
+        resolver=args.resolver,
+        host_us=t_host * 1e6,
+        fleet_us=t_fleet * 1e6,
+        speedup=t_host / t_fleet,
+        verified=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--depths", type=int, nargs="+", default=[1, 64, 500],
+                    help="fork depths (paper regime: 1, 64, 500)")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="live leaf sequences per decode step")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--blocks-per-seq", type=int, default=64)
+    ap.add_argument("--n-blocks", type=int, default=4096)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--resolver", default="auto",
+                    help="fleet resolver method (see fleet.get_resolver)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: small batch, few timing iters")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write a BENCH_serve.json artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch = min(args.batch, 4)
+        args.iters = min(args.iters, 3)
+
+    results = []
+    for depth in args.depths:
+        for scalable in (False, True):
+            results.append(bench_cell(depth, scalable, args))
+    for r in results:
+        if r["depth"] >= 64 and r["format"] == "vanilla":
+            assert r["speedup"] > 1.0, (
+                f"fleet-backed prep lost to host numpy at depth {r['depth']}"
+            )
+    if args.json:
+        emit_json(
+            args.json, "serve", results,
+            batch=args.batch, block_size=args.block_size,
+            blocks_per_seq=args.blocks_per_seq, resolver=args.resolver,
+        )
+
+
+if __name__ == "__main__":
+    main()

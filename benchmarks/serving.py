@@ -30,6 +30,7 @@ def fork_resolution():
             kv.append_prefill(sid, k, k)
             for _ in range(depth):
                 sid = kv.fork(sid)
+            kv.block_table(sid)        # warm the stacked-resolve jit
             kv.lookup_count = 0
             t0 = time.perf_counter()
             kv.block_table(sid)

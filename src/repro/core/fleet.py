@@ -443,6 +443,143 @@ def materialize(fleet: ChainFleet, *, method: str = "auto") -> jax.Array:
     return data
 
 
+# -- tenant lifecycle: attach / clone / fork / free / stamp ------------------
+#
+# The serving plane (``kvcache.paged``) runs each live sequence as a fleet
+# tenant: these are the tenancy primitives it is built on. ``free_tenant``
+# is also the maintenance plane's "tenant deletion" op (a retired disk's
+# whole lease set returns to the allocator in one call).
+
+
+def _tenant_sel(n_tenants: int, tenants) -> np.ndarray:
+    """Normalize an int / id-list / bool-mask tenant selector to a mask."""
+    t = np.asarray(tenants)
+    if t.dtype == bool:
+        return np.broadcast_to(t, (n_tenants,))
+    sel = np.zeros(n_tenants, bool)
+    if t.size:                     # an empty id list selects nothing
+        sel[np.atleast_1d(t).astype(np.int64)] = True
+    return sel
+
+
+def free_tenant(fleet: ChainFleet, tenants) -> ChainFleet:
+    """Retire tenants wholesale: reset their chains and return each one's
+    *entire* lease set to the allocator free list in one call.
+
+    Unlike ``_reclaim`` — which repacks live rows and releases only the
+    quanta past the packed prefix — this drops everything the tenant
+    holds: every leased quantum goes back to the free list at once, the
+    L1/L2 stacks reset to an empty length-1 chain, and the pressure flags
+    clear. Host-side, like the other maintenance ops. The serving engine
+    uses it for ``finish_request`` (a retired sequence's tenant slot).
+
+    Args:
+        fleet: the fleet state (returned updated, never mutated).
+        tenants: an int tenant id, a sequence of ids, or a (T,) bool mask.
+
+    Returns:
+        The updated ``ChainFleet``. Pool rows formerly referenced by the
+        freed tenants are garbage until their quanta are re-leased (rows
+        are never zeroed, exactly as after ``_reclaim``).
+    """
+    spec = fleet.spec
+    sel = _tenant_sel(spec.n_tenants, tenants)
+    idx = np.flatnonzero(sel)
+    if idx.size == 0:
+        return fleet
+    lease_owner = np.asarray(fleet.lease_owner).copy()
+    lease_owner[np.isin(lease_owner, idx)] = -1
+    lease_index = np.asarray(fleet.lease_index).copy()
+    lease_index[idx] = -1
+    rows = jnp.asarray(idx, jnp.int32)
+    zero = lambda a: a.at[rows].set(0)
+    return dataclasses.replace(
+        fleet,
+        l1=zero(fleet.l1),
+        l2=zero(fleet.l2),
+        lease_owner=jnp.asarray(lease_owner, jnp.int32),
+        lease_index=jnp.asarray(lease_index, jnp.int32),
+        lease_count=zero(fleet.lease_count),
+        alloc_count=zero(fleet.alloc_count),
+        length=fleet.length.at[rows].set(1),
+        overflow=fleet.overflow.at[rows].set(False),
+        snap_dropped=fleet.snap_dropped.at[rows].set(False),
+    )
+
+
+def attach_tenant(fleet: ChainFleet, t: int, *,
+                  scalable: bool | None = None) -> ChainFleet:
+    """(Re)initialize tenant slot ``t`` for a new occupant: a fresh empty
+    length-1 chain with the given format flag (default: keep the slot's
+    current flag). Any leases the slot still held are released first
+    (``free_tenant``), so reused slots can never leak a predecessor's
+    rows or tables."""
+    out = free_tenant(fleet, t)
+    if scalable is None:
+        return out
+    return dataclasses.replace(
+        out, scalable=out.scalable.at[t].set(bool(scalable))
+    )
+
+
+def clone_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
+    """Copy tenant ``src``'s chain metadata (L1/L2 stacks, length, format
+    flag) into slot ``dst``. Pool rows are shared, not copied: the
+    clone's entries keep referencing the source's rows, so the *caller*
+    owns cross-tenant row lifetime (the serving plane refcounts KV blocks
+    host-side). Do NOT run the lease-accounted maintenance ops
+    (``stream_tenants``/``compact``) on a fleet holding clones — their
+    repack assumes per-tenant row disjointness and would flag the shared
+    rows as corruption."""
+    return dataclasses.replace(
+        fleet,
+        l1=fleet.l1.at[dst].set(fleet.l1[src]),
+        l2=fleet.l2.at[dst].set(fleet.l2[src]),
+        length=fleet.length.at[dst].set(fleet.length[src]),
+        scalable=fleet.scalable.at[dst].set(fleet.scalable[src]),
+    )
+
+
+def fork_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
+    """Serving-plane fork: clone ``src``'s chain into ``dst`` and open a
+    fresh (all-zeros) active volume on top — the vanilla "snapshot into a
+    new tenant". ``dst`` resolves exactly like ``src`` until it writes;
+    ``src`` keeps writing its own active volume independently. Raises if
+    ``src`` is already at ``max_chain`` (callers grow the fleet geometry
+    first — see ``PagedKVCache._grow_fleet``)."""
+    if int(fleet.length[src]) >= fleet.spec.max_chain:
+        raise ValueError(
+            f"tenant {src} is at max_chain={fleet.spec.max_chain}; "
+            "grow the fleet geometry before forking"
+        )
+    out = clone_tenant(fleet, src, dst)
+    return dataclasses.replace(out, length=out.length.at[dst].add(1))
+
+
+def stamp_entries(fleet: ChainFleet, tenants, layers, pages,
+                  entries) -> ChainFleet:
+    """Raw batched L2/L1 stamp at explicit ``(tenant, layer, page)`` sites.
+
+    The serving plane's COW-prepare write: pool rows are allocated by the
+    caller (the KV cache's refcounted block pool), so unlike ``write`` no
+    lease is acquired and the fleet pool is untouched — this stamps index
+    metadata only, one scatter for the whole batch. ``entries``: (K, 2)
+    uint32 packed via ``fmt.pack_entry``. A tenant id of ``n_tenants``
+    (out-of-bounds HIGH) acts as a drop sentinel, so callers can pad the
+    batch to a fixed K without re-tracing; negative ids are invalid (they
+    would wrap in the scatter)."""
+    spec = fleet.spec
+    t = jnp.asarray(tenants, jnp.int32)
+    lay = jnp.asarray(layers, jnp.int32)
+    p = jnp.asarray(pages, jnp.int32)
+    ent = jnp.asarray(entries, jnp.uint32)
+    l2 = fleet.l2.at[t, lay, p].set(ent, mode="drop")
+    l1 = fleet.l1.at[t, lay, p // spec.l2_per_table].set(
+        jnp.uint32(1), mode="drop"
+    )
+    return dataclasses.replace(fleet, l1=l1, l2=l2)
+
+
 # -- maintenance plane: streaming, GC, lease reclamation ---------------------
 
 

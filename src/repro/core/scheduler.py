@@ -21,6 +21,14 @@ returns freed quanta to the fleet allocator's free list
 (``fleet.stream_tenants``), and tenants that stay wedged (``overflow``
 after streaming reclaimed nothing) trigger a targeted ``compact``.
 
+**Priority aging (starvation guard).** Ranking by occupancy alone can
+starve: a modest chain is outranked forever while heavier tenants keep
+regrowing (write + snapshot between ticks). Every tick a tenant is a
+candidate but not picked, its *age* grows, and age is added to its chain
+length in the ranking (``aging_weight`` per tick of waiting, reset on
+pick) — so any persistent candidate eventually outranks the churners and
+gets its slice. ``aging_weight=0`` restores pure occupancy order.
+
 **No-progress parking.** A tick that touches a tenant without changing
 its occupancy fingerprint (chain length, rows held, quanta held) parks
 that tenant: it is skipped by future ticks until something about it
@@ -55,13 +63,18 @@ class MaintenanceScheduler:
     (streaming a length-2 chain buys little and costs a repack).
     ``compact_on_overflow``: run a fleet-wide GC when streaming alone did
     not clear a tenant's ``overflow``.
+    ``aging_weight``: chain-length-equivalents of priority a passed-over
+    candidate gains per tick (the starvation guard); 0 disables aging.
     """
 
     def __init__(self, fleet: ChainFleet, *, max_tenants_per_tick: int = 1,
                  stream_chain_threshold: int = 3,
-                 compact_on_overflow: bool = True):
+                 compact_on_overflow: bool = True,
+                 aging_weight: int = 1):
         if max_tenants_per_tick < 1:
             raise ValueError("max_tenants_per_tick must be >= 1")
+        if aging_weight < 0:
+            raise ValueError("aging_weight must be >= 0")
         if stream_chain_threshold < 2:
             raise ValueError(
                 "stream_chain_threshold must be >= 2 (a length-1 chain "
@@ -71,6 +84,11 @@ class MaintenanceScheduler:
         self.max_tenants_per_tick = max_tenants_per_tick
         self.stream_chain_threshold = stream_chain_threshold
         self.compact_on_overflow = compact_on_overflow
+        self.aging_weight = aging_weight
+        # ticks spent as an unpicked candidate, per tenant: the priority
+        # boost that guarantees no candidate starves behind heavier
+        # tenants that keep regrowing. Reset when the tenant is picked.
+        self._age: dict[int, int] = {}
         self.ticks = 0
         self.tenants_streamed = 0
         self.compactions = 0
@@ -107,11 +125,15 @@ class MaintenanceScheduler:
         """Tenants needing streaming, most urgent first.
 
         Ranking: longest chain first (worst vanilla walk cost, most
-        superseded rows), then largest row footprint. Tenants under
-        pressure (``overflow``/``snap_dropped``) qualify regardless of
-        the length threshold — they are the ones ``check_pool_capacity``
-        would raise for. Tenants a previous tick could not help are
-        parked until their occupancy changes (see ``_wedged``).
+        superseded rows), then largest row footprint — with each
+        candidate's *age* (ticks spent waiting unpicked, times
+        ``aging_weight``) added to its chain length, so a modest tenant
+        cannot starve behind heavier ones that keep regrowing. Tenants
+        under pressure (``overflow``/``snap_dropped``) qualify regardless
+        of the length threshold — they are the ones
+        ``check_pool_capacity`` would raise for. Tenants a previous tick
+        could not help are parked until their occupancy changes (see
+        ``_wedged``).
 
         Pass ``st`` (a ``fleet.tenant_stats`` result) to reuse stats the
         caller already synced off the device.
@@ -123,7 +145,10 @@ class MaintenanceScheduler:
             (st["length"] >= self.stream_chain_threshold)
             | st["overflow"] | st["snap_dropped"]
         )
-        order = np.lexsort((-st["alloc_count"], -st["length"]))
+        age = np.asarray([self._age.get(t, 0)
+                          for t in range(len(need))], np.int64)
+        rank = st["length"].astype(np.int64) + self.aging_weight * age
+        order = np.lexsort((-st["alloc_count"], -rank))
         return [int(t) for t in order if need[t] and int(t) not in wedged]
 
     def _compactable(self, st) -> list[int]:
@@ -149,9 +174,21 @@ class MaintenanceScheduler:
         A drained (or fully parked) queue ticks for free: one
         tenant_stats sync, no streaming, no repack."""
         st0 = fleet_lib.tenant_stats(self.fleet)
-        picks = self.candidates(st0)[: self.max_tenants_per_tick]
+        cands = self.candidates(st0)
+        picks = cands[: self.max_tenants_per_tick]
         compactable = self._compactable(st0)
         self.ticks += 1
+        # starvation guard: passed-over candidates gain priority, picked
+        # ones reset — any persistent candidate is eventually served. A
+        # tenant that stopped qualifying (pressure relieved elsewhere,
+        # e.g. by the compact path) drops its accumulated age: a stale
+        # boost must not let it jump the queue when it next qualifies.
+        cand_set = set(cands)
+        self._age = {t: a for t, a in self._age.items() if t in cand_set}
+        for t in cands[self.max_tenants_per_tick:]:
+            self._age[t] = self._age.get(t, 0) + 1
+        for t in picks:
+            self._age.pop(t, None)
         if not picks and not compactable:
             return dict(streamed=[], compacted=False, quanta_reclaimed=0,
                         backlog=0)
@@ -212,5 +249,6 @@ class MaintenanceScheduler:
             tenants_streamed=self.tenants_streamed,
             compactions=self.compactions,
             quanta_reclaimed=self.quanta_reclaimed,
+            max_wait=max(self._age.values(), default=0),
             **fleet_lib.fleet_stats(self.fleet),
         )

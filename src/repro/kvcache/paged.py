@@ -1,4 +1,4 @@
-"""Paged KV cache with COW sequence forking — the serving-side integration.
+"""Paged KV cache with COW sequence forking — the fleet-backed serving plane.
 
 vLLM-style block pool, plus the paper's two designs at the block-table
 level:
@@ -14,16 +14,48 @@ level:
 COW: appending to a block owned by an ancestor first copies it into a
 fresh pool block (cluster copy-on-write). Pool blocks are refcounted so
 shared prefixes are stored once (paper Fig 7: base-image sharing).
+
+**Fleet backing.** The cache is a thin sequence-lifecycle façade over a
+``core.fleet.ChainFleet``: every unfreed sequence occupies one tenant row
+of a stacked (T, C, P) index, where P = ``max_blocks_per_seq`` logical
+pages, the L2 ``ptr`` field holds KV pool block ids, and — for vanilla
+caches — chain layer *i* of a tenant is the block table of ancestor *i*
+on that sequence's fork path (root first, self on top). Fork is the
+fleet's per-tenant snapshot into a fresh tenant (``fork_tenant`` /
+``clone_tenant``), COW-prepare is one batched metadata stamp
+(``stamp_entries``), and block-table materialization for a decode step is
+ONE stacked fleet resolve (``resolve_*_stacked`` — the Pallas kernel
+plane on lane-aligned layouts, the vmapped gather otherwise). Because a
+vanilla fork's layers are *copies* of live ancestors' tables, every write
+by a node is propagated to each tenant stack holding a copy of its layer
+(the ``_occupants`` registry) — so the stacked index always resolves
+bit-identically to the live parent-pointer walk.
+
+Host-side state survives as (a) the refcount/tombstone lifecycle (the
+block allocator and ``free_seq`` contract are unchanged) and (b) the
+numpy resolver ``_resolve_oracle`` — retained purely as the test oracle
+the fleet plane is asserted bit-identical against. No serving-path
+operation walks fork chains on the host.
+
+The fleet's lease allocator is idle here (KV blocks come from the cache's
+refcounted free list; shared-prefix blocks cross tenant boundaries, which
+leases forbid) — ``free_tenant`` still retires each sequence's tenant row
+on ``free_seq``. Never run ``fleet.stream_tenants``/``compact`` on this
+fleet: forked tenants share rows by design.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import fleet as fleet_lib
+from repro.core import format as fmt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,18 +72,40 @@ class PagedKVConfig:
 @dataclasses.dataclass
 class _Seq:
     sid: int
-    table: np.ndarray        # (max_blocks,) int32 pool block or -1
+    table: np.ndarray        # (max_blocks,) int32 pool block or -1 (own layer)
     owner: np.ndarray        # (max_blocks,) int32 owning sid (bfi analogue)
     parent: Optional[int]
     length: int
     refs: set = dataclasses.field(default_factory=set)  # blocks we refcount
     freed: bool = False      # tombstone: freed but pinned by live children
+    children: int = 0        # seqs (live or tombstoned) naming us as parent
+    tenant: Optional[int] = None  # fleet row while unfreed; None once freed
+    path: tuple = ()         # fork ancestry, root first, self last
+
+
+#: Initial fleet geometry; both axes grow by doubling on demand.
+_INIT_TENANTS = 8
+_INIT_CHAIN = 8
+
+
+@partial(jax.jit, static_argnames=("method",))
+def _fleet_tables(fleet, page_ids, method):
+    """ONE stacked fleet resolve → (3, T, P) int32: per tenant row, the
+    flat block table (-1 holes), the owner field (chain layer for the
+    walk, bfi-sid for direct), and the per-page lookup cost."""
+    res = fleet_lib.get_resolver(method)(fleet, page_ids)
+    table = jnp.where(res.found, res.ptr.astype(jnp.int32), -1)
+    return jnp.stack([table, res.owner.astype(jnp.int32),
+                      res.lookups.astype(jnp.int32)])
 
 
 class PagedKVCache:
-    def __init__(self, cfg: PagedKVConfig, *, scalable: bool = True):
+    def __init__(self, cfg: PagedKVConfig, *, scalable: bool = True,
+                 resolver: str = "auto"):
         self.cfg = cfg
         self.scalable = scalable
+        fleet_lib.get_resolver(resolver)   # fail fast on unknown methods
+        self.resolver = resolver
         shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
                  cfg.n_kv_heads, cfg.head_dim)
         self.pool_k = jnp.zeros(shape, cfg.dtype)
@@ -62,6 +116,112 @@ class PagedKVCache:
         self._seqs: dict[int, _Seq] = {}
         self._next_sid = 0
         self.lookup_count = 0  # fork-chain index consultations (Fig 13 analogue)
+        # the metadata plane: one tenant row per unfreed sequence
+        self.fleet = fleet_lib.create(
+            self._fleet_spec(_INIT_TENANTS,
+                             1 if scalable else _INIT_CHAIN),
+            scalable=scalable,
+        )
+        self._free_tenants = list(range(_INIT_TENANTS - 1, -1, -1))
+        # node sid -> [(tenant, layer)] tenant stacks holding a live copy
+        # of that node's table (its own row plus, for vanilla, every
+        # descendant's): the fan-out set of a COW-prepare stamp
+        self._occupants: dict[int, list[tuple[int, int]]] = {}
+        self._grid = None      # cached (T, P) page-id grid for the resolve
+
+    # -- fleet geometry -------------------------------------------------------
+
+    def _fleet_spec(self, n_tenants: int, max_chain: int) -> fleet_lib.FleetSpec:
+        p = self.cfg.max_blocks_per_seq
+        return fleet_lib.FleetSpec(
+            n_tenants=n_tenants,
+            n_pages=p,
+            page_size=1,             # metadata plane: KV data lives in pool_k/v
+            max_chain=max_chain,
+            pool_capacity=self.cfg.n_blocks,
+            lease_quantum=self.cfg.n_blocks,   # lease allocator idle here
+            l2_per_table=p,
+            slice_len=1,
+        )
+
+    def _grow_fleet(self, *, n_tenants: int | None = None,
+                    max_chain: int | None = None) -> None:
+        """Double a fleet axis (tenant rows / chain depth), copying the
+        stacked index into the larger geometry. Amortized: O(log) growths
+        over a cache's lifetime, each a couple of device copies."""
+        old = self.fleet
+        t0, c0 = old.spec.n_tenants, old.spec.max_chain
+        t1, c1 = n_tenants or t0, max_chain or c0
+        nf = fleet_lib.create(self._fleet_spec(t1, c1),
+                              scalable=self.scalable)
+        self.fleet = dataclasses.replace(
+            nf,
+            l1=nf.l1.at[:t0, :c0].set(old.l1),
+            l2=nf.l2.at[:t0, :c0].set(old.l2),
+            length=nf.length.at[:t0].set(old.length),
+            scalable=nf.scalable.at[:t0].set(old.scalable),
+        )
+        self._free_tenants = (list(range(t1 - 1, t0 - 1, -1))
+                              + self._free_tenants)
+        self._grid = None
+
+    def _claim_tenant(self) -> int:
+        if not self._free_tenants:
+            self._grow_fleet(n_tenants=self.fleet.spec.n_tenants * 2)
+        return self._free_tenants.pop()
+
+    def _page_grid(self) -> jax.Array:
+        spec = self.fleet.spec
+        if self._grid is None or self._grid.shape != (spec.n_tenants,
+                                                      spec.n_pages):
+            self._grid = jnp.broadcast_to(
+                jnp.arange(spec.n_pages, dtype=jnp.int32)[None],
+                (spec.n_tenants, spec.n_pages),
+            )
+        return self._grid
+
+    def _resolve_all(self):
+        """One stacked fleet resolve of every tenant's full block table;
+        one device→host sync. Returns host (tables, owners, lookups),
+        each (T, P) int32."""
+        out = np.array(_fleet_tables(self.fleet, self._page_grid(),
+                                     self.resolver))
+        return out[0], out[1], out[2]
+
+    def _resolve_tenant(self, t: int):
+        """Stacked fleet resolve restricted to one tenant row (a 1-tenant
+        view of the same arrays), so single-sequence ops — ``append``,
+        ``prepare_write``, ``block_table``, ``fork`` — don't pay the
+        fleet-wide O(T·C·P) resolve. Returns host (table, owner,
+        lookups), each (P,) int32."""
+        fl = self.fleet
+        view = dataclasses.replace(
+            fl,
+            spec=self._fleet_spec(1, fl.spec.max_chain),
+            l1=fl.l1[t:t + 1],
+            l2=fl.l2[t:t + 1],
+            lease_index=fl.lease_index[t:t + 1],
+            lease_count=fl.lease_count[t:t + 1],
+            alloc_count=fl.alloc_count[t:t + 1],
+            length=fl.length[t:t + 1],
+            scalable=fl.scalable[t:t + 1],
+            overflow=fl.overflow[t:t + 1],
+            snap_dropped=fl.snap_dropped[t:t + 1],
+        )
+        grid = jnp.arange(self.cfg.max_blocks_per_seq, dtype=jnp.int32)[None]
+        out = np.array(_fleet_tables(view, grid, self.resolver))
+        return out[0, 0], out[1, 0], out[2, 0]
+
+    def _count_lookups(self, seq: _Seq, table_row: np.ndarray,
+                       lookups_row: np.ndarray) -> int:
+        # bit-compatible with the oracle's accounting: sequences the
+        # oracle resolves directly (scalable format, or a vanilla root
+        # with no parent chain) charge one consultation per resolved
+        # block; walked sequences charge the per-block chain depth the
+        # resolver reports
+        if self.scalable or seq.parent is None:
+            return int(np.sum(table_row >= 0)) or 1
+        return int(np.sum(lookups_row))
 
     # -- sequence lifecycle ---------------------------------------------------
 
@@ -69,9 +229,15 @@ class PagedKVCache:
         sid = self._next_sid
         self._next_sid += 1
         mb = self.cfg.max_blocks_per_seq
+        # the claimed slot is already a clean length-1 chain with the
+        # cache's (uniform) format flag: free_seq ran free_tenant on it,
+        # and freshly grown slots are created that way — no fleet op here
+        t = self._claim_tenant()
         self._seqs[sid] = _Seq(
-            sid, np.full(mb, -1, np.int32), np.full(mb, -1, np.int32), None, 0
+            sid, np.full(mb, -1, np.int32), np.full(mb, -1, np.int32),
+            None, 0, tenant=t, path=(sid,),
         )
+        self._occupants[sid] = [(t, 0)]
         return sid
 
     def fork(self, sid: int) -> int:
@@ -79,16 +245,47 @@ class PagedKVCache:
         child = self._next_sid
         self._next_sid += 1
         mb = self.cfg.max_blocks_per_seq
-        shared, _, _ = self._resolve(sid)
+        tp, tc = parent.tenant, self._claim_tenant()
         if self.scalable:
             # sQEMU snapshot copy-forward: the child's table directly indexes
-            # every ancestor-owned block (owner = the bfi analogue).
+            # every ancestor-owned block (owner = the bfi analogue). The
+            # parent's tenant row *is* its resolved table, so the fleet-side
+            # fork is a plain row clone (depth stays 1 — O(1) resolution).
+            shared = parent.table
             owner = np.where(shared >= 0, parent.owner, -1)
             owner = np.where((shared >= 0) & (owner < 0), sid, owner)
-            seq = _Seq(child, shared.copy(), owner, None, parent.length)
+            # clone_tenant overwrites the slot's full row (stacks, length,
+            # format flag), so no attach_tenant reset is needed first
+            self.fleet = fleet_lib.clone_tenant(self.fleet, tp, tc)
+            seq = _Seq(child, shared.copy(), owner.astype(np.int32), None,
+                       parent.length, tenant=tc, path=(child,))
+            self._occupants[child] = [(tc, 0)]
+            self.lookup_count += int(np.sum(shared >= 0)) or 1
         else:
+            # vanilla: the child's tenant stack = the parent's (one row
+            # copy) + a fresh empty active layer; the resolved view for
+            # the child's refcounts comes from the fleet, not a host walk
+            depth = len(parent.path)
+            if depth >= self.fleet.spec.max_chain:
+                self._grow_fleet(
+                    max_chain=max(self.fleet.spec.max_chain * 2, depth + 1)
+                )
+            shared, _, lookups_r = self._resolve_tenant(tp)
+            self.lookup_count += self._count_lookups(parent, shared,
+                                                     lookups_r)
+            self.fleet = fleet_lib.fork_tenant(self.fleet, tp, tc)
             seq = _Seq(child, np.full(mb, -1, np.int32),
-                       np.full(mb, -1, np.int32), sid, parent.length)
+                       np.full(mb, -1, np.int32), sid, parent.length,
+                       tenant=tc, path=parent.path + (child,))
+            self._occupants[child] = [(tc, depth)]
+            # live ancestors keep writing their layers; register the
+            # child's copies so those writes propagate (freed ancestors
+            # never write again and need no registration)
+            for i, anc_sid in enumerate(parent.path):
+                anc = self._seqs.get(anc_sid)
+                if anc is not None and not anc.freed:
+                    self._occupants[anc_sid].append((tc, i))
+            parent.children += 1
         # the child holds a reference on every shared block
         seq.refs = {int(b) for b in shared[shared >= 0]}
         for b in seq.refs:
@@ -99,15 +296,29 @@ class PagedKVCache:
     def free_seq(self, sid: int) -> None:
         """Free a sequence, tombstoning it while forked children live.
 
-        A vanilla-forked child resolves missing blocks by walking its
-        ``parent`` chain, so a parent cannot simply vanish while children
-        exist: the walk would ``KeyError`` and the child would lose every
-        ancestor-owned block. Freeing such a parent leaves a *tombstone* —
-        the node and its block refs stay until the last descendant is
-        freed, then the whole dead suffix of the chain is reaped at once.
+        A vanilla-forked child resolves missing blocks through its
+        ancestors' layers, so a parent cannot simply vanish while children
+        exist: the refcounted blocks it owns would be lost. Freeing such a
+        parent leaves a *tombstone* — the node and its block refs stay
+        until the last descendant is freed, then the whole dead suffix of
+        the chain is reaped at once. The fleet tenant row, by contrast, is
+        released immediately (``fleet.free_tenant``): children resolve
+        from their own copies of the ancestor layers, not the parent's
+        row.
         """
         seq = self._live_seq(sid)
         seq.freed = True
+        t = seq.tenant
+        seq.tenant = None
+        self.fleet = fleet_lib.free_tenant(self.fleet, t)
+        self._free_tenants.append(t)
+        # a freed node never writes again, and nothing may keep stamping
+        # into its (soon reused) tenant row
+        self._occupants.pop(sid, None)
+        for anc_sid in seq.path[:-1]:
+            occ = self._occupants.get(anc_sid)
+            if occ is not None:
+                self._occupants[anc_sid] = [o for o in occ if o[0] != t]
         self._reap(seq)
 
     def _live_seq(self, sid: int) -> _Seq:
@@ -120,25 +331,34 @@ class PagedKVCache:
         # Release freed nodes bottom-up: a node goes only when *nothing*
         # (live or tombstoned) still names it as parent; its removal may
         # in turn orphan a tombstoned ancestor, so walk up the chain.
-        while (seq is not None and seq.freed
-               and not any(s.parent == seq.sid for s in self._seqs.values())):
+        # ``children`` is maintained at fork/reap time, so retirement is
+        # O(chain suffix), not O(#sequences) per free.
+        while seq is not None and seq.freed and seq.children == 0:
             for b in seq.refs:
                 self._ref[b] -= 1
                 if self._ref[b] <= 0:
                     self._free.append(int(b))
                     self._ref[b] = 0
             del self._seqs[seq.sid]
-            seq = (self._seqs.get(seq.parent)
-                   if seq.parent is not None else None)
+            parent = (self._seqs.get(seq.parent)
+                      if seq.parent is not None else None)
+            if parent is not None:
+                parent.children -= 1
+            seq = parent
 
-    # -- resolution: vanilla walk vs direct ------------------------------------
+    # -- resolution: the retained numpy oracle --------------------------------
 
-    def _resolve(self, sid: int):
-        """Flattened (table, owner, lookups) for a sequence."""
+    def _resolve_oracle(self, sid: int):
+        """Host-side resolution — the retained numpy reference.
+
+        The serving paths resolve through the fleet (``_resolve_all``);
+        this per-sequence walk survives purely so tests (and ``gather``)
+        can assert the two planes bit-identical. Pure: does not touch
+        ``lookup_count``. Returns ``(table, owner, lookups)``.
+        """
         seq = self._seqs[sid]
         if self.scalable or seq.parent is None:
             lookups = int(np.sum(seq.table >= 0)) or 1
-            self.lookup_count += lookups
             return seq.table, seq.owner, lookups
         # vanilla: per block, walk up the fork chain
         mb = self.cfg.max_blocks_per_seq
@@ -155,32 +375,20 @@ class PagedKVCache:
                     owner[b] = nseq.owner[b] if nseq.owner[b] >= 0 else node
                     break
                 node = nseq.parent
-        self.lookup_count += lookups
         return table, owner, lookups
 
+    # -- fleet-backed table materialization -----------------------------------
+
     def block_table(self, sid: int) -> jax.Array:
-        """Direct block table for the attention kernel."""
-        table, _, _ = self._resolve(sid)
-        return jnp.asarray(table, jnp.int32)
+        """Direct block table for the attention kernel (fleet-resolved)."""
+        seq = self._live_seq(sid)
+        table_r, _, lookups_r = self._resolve_tenant(seq.tenant)
+        self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
+        return jnp.asarray(table_r, jnp.int32)
 
-    def batched_tables(self, sids, *, pad_to: int = 0,
-                       pad_block: int | None = None):
-        """Fleet-style table materialization: resolve every sequence and ship
-        ONE stacked (N, max_blocks) table + (N,) lengths to the device.
-
-        The per-sid ``block_table`` path costs one host→device transfer per
-        sequence per step; at fleet batch sizes that dominates the decode
-        step. Rows beyond ``len(sids)`` (up to ``pad_to``) are filled with
-        ``pad_block`` and length 0 so callers can keep a fixed batch shape
-        across steps (no re-jit when the active set changes).
-
-        ``pad_block`` MUST be a block taken out of circulation via
-        ``reserve_block()``: the decode step's in-step scatter writes one
-        K/V slot per row, padded rows included, and any live block used as
-        filler would be silently corrupted.
-        """
-        n = max(len(sids), pad_to)
-        if n > len(sids) and pad_block is None:
+    def _check_pad(self, n_sids: int, pad_to: int,
+                   pad_block: int | None) -> None:
+        if max(n_sids, pad_to) > n_sids and pad_block is None:
             raise ValueError(
                 "padding rows need an explicit pad_block reserved via "
                 "reserve_block(); a default of 0 would alias a live block"
@@ -190,17 +398,52 @@ class PagedKVCache:
                 f"pad_block {pad_block} was not reserved via reserve_block(); "
                 "the decode step would scribble K/V into a live block"
             )
+
+    def _assemble(self, sids, tables: np.ndarray, pad_to: int,
+                  pad_block: int | None):
+        """Stack per-tenant resolved rows into ONE (N, max_blocks) table +
+        (N,) lengths and ship them in a single host→device transfer."""
+        n = max(len(sids), pad_to)
         # without a reserved scratch block, -1 holes stay -1 (the legacy
         # block_table contract): rewriting them to any real block id would
         # alias it for the decode step's in-step K/V scatter
         fill = -1 if pad_block is None else pad_block
-        tables = np.full((n, self.cfg.max_blocks_per_seq), fill, np.int32)
+        out = np.full((n, self.cfg.max_blocks_per_seq), fill, np.int32)
         lengths = np.zeros(n, np.int32)
         for i, sid in enumerate(sids):
-            table, _, _ = self._resolve(sid)
-            tables[i] = np.where(table >= 0, table, fill)
-            lengths[i] = self._seqs[sid].length
-        return jnp.asarray(tables), jnp.asarray(lengths)
+            seq = self._seqs[sid]
+            row = tables[seq.tenant]
+            out[i] = np.where(row >= 0, row, fill)
+            lengths[i] = seq.length
+        return jnp.asarray(out), jnp.asarray(lengths)
+
+    def batched_tables(self, sids, *, pad_to: int = 0,
+                       pad_block: int | None = None):
+        """Fleet table materialization: ONE stacked fleet resolve covers
+        every sequence, and one stacked (N, max_blocks) table + (N,)
+        lengths ship to the device.
+
+        The per-sid ``block_table`` path costs one host→device transfer
+        per sequence per step; at fleet batch sizes that dominates the
+        decode step. Rows beyond ``len(sids)`` (up to ``pad_to``) are
+        filled with ``pad_block`` and length 0 so callers can keep a
+        fixed batch shape across steps (no re-jit when the active set
+        changes).
+
+        ``pad_block`` MUST be a block taken out of circulation via
+        ``reserve_block()``: the decode step's in-step scatter writes one
+        K/V slot per row, padded rows included, and any live block used as
+        filler would be silently corrupted.
+        """
+        self._check_pad(len(sids), pad_to, pad_block)
+        for sid in sids:
+            self._live_seq(sid)          # freed sequences must raise
+        tables, _, lookups = self._resolve_all()
+        for sid in sids:
+            seq = self._seqs[sid]
+            self.lookup_count += self._count_lookups(
+                seq, tables[seq.tenant], lookups[seq.tenant])
+        return self._assemble(sids, tables, pad_to, pad_block)
 
     def reserve_block(self) -> int:
         """Permanently take one pool block out of circulation (e.g. as a
@@ -225,31 +468,83 @@ class PagedKVCache:
         seq.refs.add(b)
         return b
 
-    def prepare_write(self, sid: int) -> int:
-        """Make the block receiving the next token writable by ``sid``.
+    def _patch(self, tables: np.ndarray, owners: np.ndarray, seq: _Seq,
+               blk: int, nb: int, row_map: dict | None) -> None:
+        """Mirror one stamp into the host copy of the resolve maps, so
+        later sequences in the same batch observe it exactly as the
+        sequential host path did (first-hit: a layer wins iff no layer
+        above it in that tenant's stack owns the page). ``row_map`` maps
+        tenant ids to rows of ``tables``/``owners`` (None: identity over
+        the full fleet); tenants outside the map have no host row in
+        this call and their device stamp alone suffices."""
+        def row(t: int):
+            return t if row_map is None else row_map.get(t)
 
-        COW-copies an ancestor-owned block (or allocates a fresh one) so
-        an in-place K/V scatter — the jitted decode step's — can never
-        touch a block shared with another sequence. Returns the pool block
-        that will hold the write. Commit the token afterwards with
-        ``advance``. This is the public contract the serving engine uses;
-        it must not reach into ``_seqs`` and mutate the refcount/ownership
-        invariants by hand.
-        """
-        seq = self._live_seq(sid)
-        blk_idx = seq.length // self.cfg.block_size
-        if blk_idx >= self.cfg.max_blocks_per_seq:
-            raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
-        resolved, _, _ = self._resolve(sid)
-        cur = int(resolved[blk_idx])
-        owns = seq.table[blk_idx] >= 0 and seq.owner[blk_idx] in (-1, sid)
+        if self.scalable:
+            r = row(seq.tenant)
+            if r is not None:
+                tables[r, blk] = nb
+                owners[r, blk] = seq.sid
+            return
+        for t, layer in self._occupants[seq.sid]:
+            r = row(t)
+            if r is not None and owners[r, blk] <= layer:
+                tables[r, blk] = nb
+                owners[r, blk] = layer
+
+    def _copy_blocks(self, src: list[int], dst: list[int]) -> None:
+        """Batched COW data movement with *sequential* semantics.
+
+        A fused gather/scatter reads every source before any write, which
+        matches running the copies one by one in list order — except when
+        a copy's source is a block an **earlier copy in the batch wrote**
+        (a descendant COW-ing its ancestor's same-step block) and must see
+        the post-copy content, or was **freed-and-recycled as an earlier
+        destination** in this very batch. Flushing the batch exactly at
+        each such read-after-write point keeps the result bit-identical
+        to the seed's one-copy-per-prepare_write path."""
+        group_s: list[int] = []
+        group_d: list[int] = []
+
+        def flush():
+            if not group_s:
+                return
+            s = jnp.asarray(group_s, jnp.int32)
+            d = jnp.asarray(group_d, jnp.int32)
+            self.pool_k = self.pool_k.at[:, d].set(self.pool_k[:, s])
+            self.pool_v = self.pool_v.at[:, d].set(self.pool_v[:, s])
+            group_s.clear()
+            group_d.clear()
+
+        for s, d in zip(src, dst):
+            if s in group_d:          # reads a block this batch writes
+                flush()
+            group_s.append(s)
+            group_d.append(d)
+        flush()
+
+    def _prepare_block(self, seq: _Seq, blk: int, tables: np.ndarray,
+                       owners: np.ndarray, row_map: dict | None,
+                       writes: list, cow_src: list, cow_dst: list, *,
+                       copy_data: bool = True) -> None:
+        """The COW-prepare protocol for ONE (sequence, block) site: fresh
+        alloc / COW with refcount release / owned no-op, plus the stamp
+        bookkeeping and host-map patch. ``copy_data=False`` skips queueing
+        the data copy of a COW (bulk prefill of a fully-covered block
+        overwrites every visible slot anyway). The single place the
+        alloc/COW/refcount invariants live — shared by ``prepare_step``,
+        ``prepare_write`` and ``append_prefill``."""
+        row = seq.tenant if row_map is None else row_map[seq.tenant]
+        cur = int(tables[row, blk])
+        owns = seq.table[blk] >= 0 and seq.owner[blk] in (-1, seq.sid)
         if cur < 0:
             nb = self._alloc(seq)
         elif not owns:
             # COW: the block belongs to an ancestor — copy before write
             nb = self._alloc(seq)
-            self.pool_k = self.pool_k.at[:, nb].set(self.pool_k[:, cur])
-            self.pool_v = self.pool_v.at[:, nb].set(self.pool_v[:, cur])
+            if copy_data:
+                cow_src.append(cur)
+                cow_dst.append(nb)
             if cur in seq.refs:
                 seq.refs.discard(cur)
                 self._ref[cur] -= 1
@@ -257,14 +552,119 @@ class PagedKVCache:
                     self._free.append(cur)
                     self._ref[cur] = 0
         else:
-            nb = int(seq.table[blk_idx])
-        seq.table[blk_idx] = nb
-        seq.owner[blk_idx] = sid
-        return nb
+            nb = int(seq.table[blk])
+        if nb != cur:
+            writes.append((seq.sid, blk, nb))
+            self._patch(tables, owners, seq, blk, nb, row_map)
+        seq.table[blk] = nb
+        seq.owner[blk] = seq.sid
+
+    def _prepare_against(self, sids, tables: np.ndarray, owners: np.ndarray,
+                         row_map: dict | None = None
+                         ) -> list[tuple[int, int, int]]:
+        """COW-prepare the next-token slot of every sid against the synced
+        resolve maps. Mutates mirrors/refcounts, patches the maps in
+        place, batches the COW data copies, and returns the stamp list
+        ``[(sid, blk, new_block)]`` for ``_stamp_fleet``. ``row_map``: as
+        in ``_patch``."""
+        bs = self.cfg.block_size
+        writes: list[tuple[int, int, int]] = []
+        cow_src: list[int] = []
+        cow_dst: list[int] = []
+        for sid in sids:
+            seq = self._live_seq(sid)
+            blk = seq.length // bs
+            if blk >= self.cfg.max_blocks_per_seq:
+                raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
+            self._prepare_block(seq, blk, tables, owners, row_map,
+                                writes, cow_src, cow_dst)
+        self._copy_blocks(cow_src, cow_dst)
+        return writes
+
+    def _stamp_fleet(self, writes: list[tuple[int, int, int]]) -> None:
+        """One batched fleet stamp for a step's COW-prepares: each write
+        fans out to every tenant stack holding a copy of the writer's
+        layer (``_occupants``), padded to a power-of-two batch (tenant id
+        T = drop sentinel) so step shapes don't re-trace."""
+        if not writes:
+            return
+        ts, ls, ps, w0s, w1s = [], [], [], [], []
+        for sid, blk, nb in writes:
+            if self.scalable:
+                # bfi carries the owning sid as a diagnostic (the paper's
+                # 16-bit field): sids past 2^16 wrap harmlessly — table
+                # materialization reads only ptr/ALLOCATED/BFI_VALID, and
+                # COW ownership decisions come from the host mirrors
+                w1 = fmt.FLAG_BFI_VALID | (sid & fmt.BFI_MASK)
+            else:
+                w1 = 0                       # vanilla images leave word1 = 0
+            for t, layer in self._occupants[sid]:
+                ts.append(t)
+                ls.append(layer)
+                ps.append(blk)
+                w0s.append(fmt.FLAG_ALLOCATED | nb)
+                w1s.append(w1)
+        k = 1
+        while k < len(ts):
+            k *= 2
+        pad = k - len(ts)
+        t_arr = np.asarray(ts + [self.fleet.spec.n_tenants] * pad, np.int32)
+        l_arr = np.asarray(ls + [0] * pad, np.int32)
+        p_arr = np.asarray(ps + [0] * pad, np.int32)
+        ent = np.stack([np.asarray(w0s + [0] * pad, np.uint32),
+                        np.asarray(w1s + [0] * pad, np.uint32)], axis=-1)
+        self.fleet = fleet_lib.stamp_entries(self.fleet, t_arr, l_arr,
+                                             p_arr, ent)
+
+    def prepare_write(self, sid: int) -> int:
+        """Make the block receiving the next token writable by ``sid``.
+
+        COW-copies an ancestor-owned block (or allocates a fresh one) so
+        an in-place K/V scatter — the jitted decode step's — can never
+        touch a block shared with another sequence. Returns the pool block
+        that will hold the write. Commit the token afterwards with
+        ``advance``. The landing block is located through the fleet
+        resolve (no host chain walk); batch callers should use
+        ``prepare_step``, which amortizes ONE stacked resolve over the
+        whole decode batch.
+        """
+        seq = self._live_seq(sid)
+        table_r, owner_r, lookups_r = self._resolve_tenant(seq.tenant)
+        self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
+        writes = self._prepare_against([sid], table_r[None], owner_r[None],
+                                       row_map={seq.tenant: 0})
+        self._stamp_fleet(writes)
+        return int(seq.table[seq.length // self.cfg.block_size])
+
+    def prepare_step(self, sids, *, pad_to: int = 0,
+                     pad_block: int | None = None):
+        """COW-prepare + table materialization for one decode step, all
+        from ONE stacked fleet resolve.
+
+        The serving engine's per-step entry point: resolves every
+        sequence's full block table in a single fleet dispatch (the
+        Pallas kernel plane on lane-aligned layouts), derives each
+        sequence's COW-prepare decision from the synced result (no
+        per-sequence host walk), stamps the prepared slots back into the
+        fleet in one batched write, and returns the *post-prepare*
+        ``(tables, lengths)`` — padded exactly like ``batched_tables`` —
+        shipped in one transfer. ``advance`` each sid after the decode
+        step commits its token.
+        """
+        self._check_pad(len(sids), pad_to, pad_block)
+        tables, owners, lookups = self._resolve_all()
+        for sid in sids:
+            seq = self._live_seq(sid)
+            self.lookup_count += self._count_lookups(
+                seq, tables[seq.tenant], lookups[seq.tenant])
+        writes = self._prepare_against(sids, tables, owners)
+        self._stamp_fleet(writes)
+        return self._assemble(sids, tables, pad_to, pad_block)
 
     def advance(self, sid: int) -> None:
         """Commit one token written externally into a slot set up by
-        ``prepare_write`` (e.g. by the decode step's in-step scatter)."""
+        ``prepare_write``/``prepare_step`` (e.g. by the decode step's
+        in-step scatter)."""
         seq = self._live_seq(sid)
         blk_idx = seq.length // self.cfg.block_size
         if seq.table[blk_idx] < 0 or seq.owner[blk_idx] != sid:
@@ -284,16 +684,58 @@ class PagedKVCache:
         self.advance(sid)
 
     def append_prefill(self, sid: int, k: jax.Array, v: jax.Array) -> None:
-        """Bulk append. k, v: (L, T, n_kv_heads, head_dim)."""
-        for t in range(k.shape[1]):
-            self.append(sid, k[:, t], v[:, t])
+        """Bulk append. k, v: (L, T, n_kv_heads, head_dim).
+
+        One fleet resolve + one batched stamp + one pool scatter for the
+        whole prompt, instead of a per-token python loop: blocks fully
+        covered by the span are allocated fresh without a COW data copy
+        (their prior content would be overwritten slot by slot anyway);
+        only a shared first block with a live partial prefix pays the
+        copy. Block ids and refcounts come out identical to the
+        token-loop path.
+        """
+        seq = self._live_seq(sid)
+        nt = int(k.shape[1])
+        if nt == 0:
+            return
+        bs = self.cfg.block_size
+        start, end = seq.length, seq.length + nt
+        if (end - 1) // bs >= self.cfg.max_blocks_per_seq:
+            raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
+        table_r, owner_r, lookups_r = self._resolve_tenant(seq.tenant)
+        self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
+        tables, owners = table_r[None], owner_r[None]
+        row_map = {seq.tenant: 0}
+        writes: list[tuple[int, int, int]] = []
+        cow_src: list[int] = []
+        cow_dst: list[int] = []
+        for blk in range(start // bs, (end - 1) // bs + 1):
+            # only a shared first block with a live partial prefix needs
+            # its data carried over; fully-covered blocks are overwritten
+            self._prepare_block(
+                seq, blk, tables, owners, row_map,
+                writes, cow_src, cow_dst,
+                copy_data=blk == start // bs and bool(start % bs),
+            )
+        self._copy_blocks(cow_src, cow_dst)
+        self._stamp_fleet(writes)
+        pos = np.arange(start, end)
+        blks = jnp.asarray(seq.table[pos // bs], jnp.int32)
+        offs = jnp.asarray(pos % bs, jnp.int32)
+        self.pool_k = self.pool_k.at[:, blks, offs].set(
+            k.astype(self.cfg.dtype)
+        )
+        self.pool_v = self.pool_v.at[:, blks, offs].set(
+            v.astype(self.cfg.dtype)
+        )
+        seq.length = end
 
     # -- reads (reference path; kernels/paged_attention is the fast path) ------
 
     def gather(self, sid: int):
         """Materialize (L, T, H, D) K/V for a sequence (test oracle)."""
-        seq = self._seqs[sid]
-        table, _, _ = self._resolve(sid)
+        seq = self._live_seq(sid)
+        table, _, _ = self._resolve_oracle(sid)
         bs = self.cfg.block_size
         n_blk = -(-seq.length // bs) if seq.length else 0
         ks, vs = [], []

@@ -1,13 +1,21 @@
-"""Serving engine: continuous batching over the COW paged KV cache.
+"""Serving engine: continuous batching over the fleet-backed KV cache.
 
 Request lifecycle: ``add_request(prompt)`` prefills through the model and
-streams the K/V into the paged pool; ``fork_request`` COW-forks a sequence
-(shared system prompts / beam candidates) — with the scalable cache this
-copies the resolved block table forward (sQEMU snapshotting), with the
-vanilla cache it just records a parent pointer and pays the chain walk on
-every table materialization; ``step()`` decodes one token for every active
+streams the K/V into the paged pool (one bulk fleet write, not a
+per-token loop); ``fork_request`` COW-forks a sequence (shared system
+prompts / beam candidates) — with the scalable cache this clones the
+resolved tenant row forward (sQEMU snapshotting), with the vanilla cache
+the fork becomes a new fleet tenant whose chain pays the walk on every
+table materialization; ``step()`` decodes one token for every active
 sequence through ``paged_decode_step``; ``finish_request`` releases a
-sequence's blocks back to the pool (tombstoned while forks are live).
+sequence's blocks back to the pool (tombstoned while forks are live) and
+retires its fleet tenant row (``fleet.free_tenant``).
+
+``step()`` performs **zero per-sequence host-side chain walks**: the
+COW-prepare mask and the attention block tables both come from ONE
+stacked fleet resolve (``PagedKVCache.prepare_step``) — the Pallas kernel
+plane on lane-aligned pools, the vmapped gather otherwise — and the
+stacked tables ship to the device in one transfer per step.
 
 The engine can also drive a fleet maintenance plane: pass a
 ``core.scheduler.MaintenanceScheduler`` and each decode step ends with one
@@ -32,7 +40,8 @@ from repro.serve.paged_decode import paged_decode_step
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, scalable: bool = True,
                  n_blocks: int = 512, block_size: int = 16,
-                 max_blocks_per_seq: int = 64, scheduler=None):
+                 max_blocks_per_seq: int = 64, scheduler=None,
+                 resolver: str = "auto"):
         if cfg.family not in ("dense", "moe"):
             raise ValueError("paged serving engine supports attention LMs")
         self.cfg = cfg
@@ -46,6 +55,7 @@ class Engine:
                 dtype=L.COMPUTE_DTYPE,
             ),
             scalable=scalable,
+            resolver=resolver,
         )
         self.active: dict[int, list[int]] = {}  # sid -> generated tokens
         # Scratch block absorbing the in-step pool writes of padded batch
@@ -99,12 +109,11 @@ class Engine:
             # keep draining the maintenance backlog while polling
             self._maintain()
             return {}
-        for sid in sids:
-            # COW-prepare the slot the decode step's in-place scatter will
-            # hit; the write itself happens on-device inside the jit.
-            self.kv.prepare_write(sid)
         pad_to = self._bucket(len(sids))
-        tables, lengths = self.kv.batched_tables(
+        # ONE stacked fleet resolve serves both the COW-prepare mask (the
+        # slots the decode step's in-place scatter will hit) and the
+        # attention block tables; the sids→tenant-rows mapping ships once.
+        tables, lengths = self.kv.prepare_step(
             sids, pad_to=pad_to, pad_block=self._pad_block
         )
         tok_col = np.zeros((pad_to, 1), np.int32)

@@ -307,3 +307,86 @@ def test_fleet_property_random_ops():
         assert_equivalent(fl, chains)
 
     run()
+
+
+def test_free_tenant_returns_whole_lease_set():
+    """``free_tenant`` drops a tenant's entire lease set in one call: its
+    quanta return to the free list, its chain resets, other tenants are
+    untouched, and a re-lease of the freed quanta never aliases."""
+    ops = [("write", [True, True, True], 0), ("snapshot", [True, True, True], 0),
+           ("write", [True, True, True], 1), ("write", [True, True, True], 2)]
+    fl, chains = apply_ops(ops, [True, False, True])
+    stats0 = fleet.fleet_stats(fl)
+    held = int(np.asarray(fl.lease_count)[1])
+    assert held > 0
+
+    fl2 = fleet.free_tenant(fl, 1)
+    stats1 = fleet.fleet_stats(fl2)
+    # the whole lease set came back at once
+    assert stats1["quanta_free"] == stats0["quanta_free"] + held
+    owner = np.asarray(fl2.lease_owner)
+    assert not np.any(owner == 1)
+    assert int(fl2.length[1]) == 1 and int(fl2.alloc_count[1]) == 0
+    # the freed tenant reads as an empty disk; the others are untouched
+    data = np.asarray(fleet.materialize(fl2))
+    np.testing.assert_array_equal(data[1], 0.0)
+    ref = np.asarray(fleet.materialize(fl))
+    np.testing.assert_allclose(data[0], ref[0], rtol=1e-6)
+    np.testing.assert_allclose(data[2], ref[2], rtol=1e-6)
+
+    # a new occupant re-leases the freed quanta without aliasing others
+    fl3 = fleet.attach_tenant(fl2, 1, scalable=True)
+    ids = jnp.arange(8, dtype=jnp.int32)[None]
+    fl3 = fleet.write(fl3, jnp.broadcast_to(ids, (3, 8)),
+                      jnp.full((3, 8, PAGE), 7.0),
+                      mask=jnp.asarray([False, True, False]))
+    data3 = np.asarray(fleet.materialize(fl3))
+    np.testing.assert_allclose(data3[1, :8], 7.0, rtol=1e-6)
+    np.testing.assert_allclose(data3[0], ref[0], rtol=1e-6)
+    np.testing.assert_allclose(data3[2], ref[2], rtol=1e-6)
+
+
+def test_free_tenant_mask_and_noop():
+    fl, _ = apply_ops([("write", [True, True], 0)], [True, True])
+    assert fleet.free_tenant(fl, np.zeros(2, bool)) is fl
+    fl2 = fleet.free_tenant(fl, np.asarray([True, True]))
+    assert fleet.fleet_stats(fl2)["quanta_leased"] == 0
+    np.testing.assert_array_equal(np.asarray(fl2.length), [1, 1])
+
+
+def test_fork_tenant_resolves_like_source_until_divergence():
+    """``fork_tenant``/``clone_tenant``: the serving plane's fork — the
+    clone resolves bit-identically to the source, then diverges when the
+    caller stamps its own entries."""
+    from repro.core import format as fmt
+
+    fl, _ = apply_ops(
+        [("write", [True, False, False], 0),
+         ("snapshot", [True, False, False], 0),
+         ("write", [True, False, False], 1)],
+        [False, False, False],
+    )
+    fl = fleet.fork_tenant(fl, 0, 2)
+    assert int(fl.length[2]) == int(fl.length[0]) + 1
+    ids = jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None],
+                           (3, N_PAGES))
+    res = fleet.resolve_vanilla(fl, ids)
+    np.testing.assert_array_equal(np.asarray(res.ptr[2]),
+                                  np.asarray(res.ptr[0]))
+    np.testing.assert_array_equal(np.asarray(res.found[2]),
+                                  np.asarray(res.found[0]))
+    # divergence: stamp one entry into the fork's active layer only
+    ent = fmt.pack_entry(jnp.uint32(3), jnp.uint32(0), allocated=True,
+                         bfi_valid=False)
+    fl = fleet.stamp_entries(fl, [2], [int(fl.length[2]) - 1], [0], ent[None])
+    res2 = fleet.resolve_vanilla(fl, ids)
+    assert int(res2.ptr[2, 0]) == 3
+    np.testing.assert_array_equal(np.asarray(res2.ptr[0]),
+                                  np.asarray(res.ptr[0]))
+
+
+def test_free_tenant_empty_id_list_is_noop():
+    fl, _ = apply_ops([("write", [True, True], 0)], [True, True])
+    out = fleet.free_tenant(fl, [])
+    np.testing.assert_array_equal(np.asarray(out.lease_count),
+                                  np.asarray(fl.lease_count))

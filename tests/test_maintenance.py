@@ -461,3 +461,52 @@ def test_resolves_unperturbed_mid_maintenance():
             np.asarray(fleet.materialize(sched.fleet)), before, rtol=1e-6)
         seen_lengths.add(tuple(np.asarray(sched.fleet.length).tolist()))
     assert len(seen_lengths) > 1    # maintenance really ran incrementally
+
+
+def _regrow(fl, tenants, *, layers, seed):
+    """Write+snapshot the given tenants back up to ``layers`` files."""
+    n_t = fl.spec.n_tenants
+    rng = np.random.default_rng(seed)
+    mask = np.zeros(n_t, bool)
+    mask[tenants] = True
+    while int(np.max(np.asarray(fl.length)[tenants])) < layers:
+        ids = np.stack([rng.choice(N_PAGES, 4, replace=False)
+                        for _ in range(n_t)]).astype(np.int32)
+        fl = fleet.write(fl, jnp.asarray(ids),
+                         jnp.asarray(rng.standard_normal(
+                             (n_t, 4, PAGE)).astype(np.float32)),
+                         mask=jnp.asarray(mask))
+        fl = fleet.snapshot(fl, jnp.asarray(mask))
+    return fl
+
+
+def test_scheduler_aging_prevents_starvation():
+    """Starvation guard: a modest chain behind heavier tenants that keep
+    regrowing must still get streamed — passed-over candidates age into
+    priority. With ``aging_weight=0`` the same workload starves it."""
+    def run(aging_weight):
+        fl = build_busy_fleet(n_tenants=4, layers=4, seed=5)
+        # tenant 0 stays modest (length 4); 1..3 are deeper (length 7)
+        fl = _regrow(fl, [1, 2, 3], layers=7, seed=6)
+        sched = MaintenanceScheduler(fl, max_tenants_per_tick=1,
+                                     aging_weight=aging_weight)
+        picked = []
+        for tick in range(12):
+            rep = sched.tick()
+            picked += rep["streamed"]
+            if 0 in picked:
+                break
+            # the heavy tenants immediately regrow: the churn that would
+            # starve tenant 0 under pure occupancy ranking
+            heavy = [t for t in rep["streamed"] if t != 0]
+            if heavy:
+                sched.fleet = _regrow(sched.fleet, heavy, layers=7,
+                                      seed=7 + tick)
+        return picked, sched
+
+    starved, _ = run(aging_weight=0)
+    assert 0 not in starved                     # pure occupancy: starves
+    picked, sched = run(aging_weight=1)
+    assert 0 in picked                          # aging: eventually served
+    assert int(sched.fleet.length[0]) == 2
+    assert sched.stats()["max_wait"] >= 0

@@ -1,0 +1,329 @@
+"""Fleet-backed serving plane: the stacked fleet resolve must stay
+bit-identical to the retained numpy oracle (``_resolve_oracle``) across
+formats, fork depths, resolver methods, and full engine lifecycles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet as fleet_lib
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+
+KV = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=4, block_size=4,
+                   n_blocks=512, max_blocks_per_seq=16, dtype=jnp.float32)
+
+
+def tok(val: float):
+    arr = jnp.full((KV.n_layers, 1, KV.n_kv_heads, KV.head_dim), val,
+                   jnp.float32)
+    return arr[:, 0]
+
+
+def prompt(n: int, base: float = 1.0):
+    k = jnp.arange(n, dtype=jnp.float32)[None, :, None, None] + base
+    return jnp.broadcast_to(
+        k, (KV.n_layers, n, KV.n_kv_heads, KV.head_dim)
+    )
+
+
+def assert_parity(cache: PagedKVCache, sids) -> None:
+    """Fleet-resolved tables/owners ≡ numpy oracle, plus the refcount
+    invariant behind ``blocks_in_use``."""
+    tables, owners, _ = cache._resolve_all()
+    n_tbl, _ = cache.batched_tables(sids)
+    n_tbl = np.asarray(n_tbl)
+    for i, sid in enumerate(sids):
+        seq = cache._seqs[sid]
+        o_table, o_owner, _ = cache._resolve_oracle(sid)
+        np.testing.assert_array_equal(
+            tables[seq.tenant], o_table,
+            err_msg=f"sid={sid} fleet table != oracle"
+        )
+        np.testing.assert_array_equal(n_tbl[i], o_table)
+        # owner parity: the walk reports the owning chain layer — map it
+        # back to a sid through the fork path; direct reports the bfi sid
+        f_owner = owners[seq.tenant]
+        if not cache.scalable:
+            f_owner = np.asarray([
+                seq.path[layer] if layer >= 0 else -1 for layer in f_owner
+            ])
+        np.testing.assert_array_equal(
+            np.where(o_table >= 0, f_owner, -1),
+            np.where(o_table >= 0, o_owner, -1),
+            err_msg=f"sid={sid} fleet owner != oracle owner",
+        )
+    # blocks_in_use comes from the refcounts; they must agree with the
+    # union of every (live or tombstoned) sequence's ref set
+    held = set()
+    for seq in cache._seqs.values():
+        held |= seq.refs
+    assert cache.blocks_in_use() == len(held)
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+@pytest.mark.parametrize("depth", [1, 8, 33])
+def test_fork_chain_parity(scalable, depth):
+    """Chain of ``depth`` forks (every node appends, alternate nodes are
+    retired) — the stacked fleet resolve tracks the live walk exactly,
+    including through tenant-axis and chain-axis growth."""
+    cache = PagedKVCache(KV, scalable=scalable)
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(6), prompt(6))
+    live = [sid]
+    val = 10.0
+    for d in range(depth):
+        child = cache.fork(sid)
+        cache.append(child, tok(val), tok(val))
+        val += 1.0
+        if d % 2 == 0:                 # tombstone every other parent
+            cache.free_seq(sid)
+            live.remove(sid)
+        live.append(child)
+        sid = child
+    assert_parity(cache, live)
+    # content sanity through the deepest leaf
+    k, _ = cache.gather(sid)
+    assert int(k.shape[1]) == cache.seq_length(sid)
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_parent_writes_propagate_to_forked_tables(scalable):
+    """The live-walk corner: a parent COWs/allocates *after* forking, and
+    the child's stacked table must show it exactly as the oracle walk
+    does (vanilla forks copy ancestor layers — writes propagate)."""
+    cache = PagedKVCache(KV, scalable=scalable)
+    g = cache.new_seq()
+    cache.append_prefill(g, prompt(6), prompt(6))      # blocks 0, 1(partial)
+    a = cache.fork(g)
+    for i in range(2):                                 # a COWs g's block 1
+        cache.append(a, tok(20.0 + i), tok(20.0 + i))
+    b = cache.fork(a)                                  # forked at length 8
+    for i in range(5):                                 # a runs ahead: blocks 2, 3
+        cache.append(a, tok(30.0 + i), tok(30.0 + i))
+    assert_parity(cache, [g, a, b])
+    # b now diverges: COW at its boundary block must not disturb a
+    cache.append(b, tok(40.0), tok(40.0))
+    assert_parity(cache, [g, a, b])
+    bk, _ = cache.gather(b)
+    ak, _ = cache.gather(a)
+    np.testing.assert_allclose(np.asarray(bk[0, :8, 0, 0]),
+                               np.asarray(ak[0, :8, 0, 0]))
+    assert float(bk[0, 8, 0, 0]) == 40.0
+    assert float(ak[0, 8, 0, 0]) == 30.0
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_lane_aligned_pool_takes_kernel_path(scalable):
+    """With a 128-page (lane-aligned) table the ``auto`` resolver runs the
+    stacked Pallas kernels (interpret mode on CPU) — results must stay
+    bit-identical to the oracle."""
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=4, block_size=4,
+                        n_blocks=512, max_blocks_per_seq=128,
+                        dtype=jnp.float32)
+    cache = PagedKVCache(cfg, scalable=scalable)
+    assert fleet_lib._uses_kernels(cache.fleet.spec, "auto")
+    sid = cache.new_seq()
+    k = jnp.ones((1, 6, 1, 4), jnp.float32)
+    cache.append_prefill(sid, k, k)
+    child = cache.fork(sid)
+    cache.append(child, tok(2.0), tok(2.0))
+    for s in (sid, child):
+        o_table, _, _ = cache._resolve_oracle(s)
+        np.testing.assert_array_equal(np.asarray(cache.block_table(s)),
+                                      o_table)
+
+
+@pytest.mark.parametrize("scalable,methods", [
+    (False, ["auto", "vanilla", "gather", "pallas_vanilla"]),
+    (True, ["auto", "direct", "pallas_direct"]),
+])
+def test_resolver_methods_bit_identical(scalable, methods):
+    cache = PagedKVCache(KV, scalable=scalable)
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(9), prompt(9))
+    child = cache.fork(sid)
+    cache.append(child, tok(5.0), tok(5.0))
+    rows = {}
+    for m in methods:
+        cache.resolver = m
+        tables, _, _ = cache._resolve_all()
+        rows[m] = tables
+    ref = rows[methods[0]]
+    for m in methods[1:]:
+        np.testing.assert_array_equal(rows[m], ref, err_msg=m)
+    cache.resolver = "auto"
+    assert_parity(cache, [sid, child])
+
+
+def test_tombstoned_reads_raise():
+    """Regression (satellite): ``gather``/``block_table``/``batched_tables``
+    on a freed-but-tombstoned sequence must raise, not silently return the
+    dead sequence's data."""
+    cache = PagedKVCache(KV, scalable=False)
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(6), prompt(6))
+    child = cache.fork(sid)
+    cache.free_seq(sid)          # tombstoned: child still pins it
+    assert sid in cache._seqs
+    with pytest.raises(KeyError):
+        cache.gather(sid)
+    with pytest.raises(KeyError):
+        cache.block_table(sid)
+    with pytest.raises(KeyError):
+        cache.batched_tables([sid])
+    # the live child still resolves through the tombstone
+    cache.gather(child)
+
+
+def test_star_fork_reap_keeps_child_counts():
+    """One parent, many children (the O(N²) rescan regression): frees in
+    arbitrary order must reap exactly when the last descendant goes."""
+    cache = PagedKVCache(KV, scalable=False)
+    root = cache.new_seq()
+    cache.append_prefill(root, prompt(5), prompt(5))
+    kids = [cache.fork(root) for _ in range(6)]
+    assert cache._seqs[root].children == 6
+    cache.free_seq(root)                      # tombstoned, 6 pins
+    for kid in kids[:-1]:
+        cache.free_seq(kid)
+        assert root in cache._seqs            # still pinned
+    cache.free_seq(kids[-1])
+    assert cache._seqs == {}
+    assert cache.blocks_in_use() == 0
+
+
+def test_tenant_rows_recycle_without_aliasing():
+    """Freed sequences release their fleet tenant rows; new sequences
+    reuse the slots with clean tables."""
+    cache = PagedKVCache(KV, scalable=False)
+    sids = [cache.new_seq() for _ in range(5)]
+    for s in sids:
+        cache.append_prefill(s, prompt(4, base=float(s)), prompt(4))
+    rows_before = {s: cache._seqs[s].tenant for s in sids}
+    for s in sids[:3]:
+        cache.free_seq(s)
+    fresh = [cache.new_seq() for _ in range(3)]
+    assert {cache._seqs[s].tenant for s in fresh} == {
+        rows_before[s] for s in sids[:3]
+    }
+    for s in fresh:
+        # a recycled row starts empty: no inherited blocks
+        np.testing.assert_array_equal(np.asarray(cache.block_table(s)),
+                                      np.full(KV.max_blocks_per_seq, -1))
+    assert_parity(cache, sids[3:] + fresh)
+
+
+def test_engine_deep_chain_lifecycle_matches_oracle():
+    """Satellite: engine lifecycle under the vanilla cache — fork chains
+    past depth 32 with interleaved ``finish_request``/``step``, asserting
+    the fleet-backed plane ≡ the host-numpy oracle on tables, lengths and
+    ``blocks_in_use`` throughout."""
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.serve.engine import Engine
+
+    cfg = smoke_config("qwen2-7b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, scalable=False, n_blocks=256, block_size=4,
+                 max_blocks_per_seq=64)
+    prompt_toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (9,), 0, cfg.vocab_size))
+    sid = eng.add_request(prompt_toks)
+    keeper = eng.fork_request(sid)    # long-lived sibling rides along
+    for depth in range(34):
+        child = eng.fork_request(sid)
+        eng.finish_request(sid)       # tombstone the parent
+        sid = child
+        if depth % 8 == 0:
+            out = eng.step()          # decode the whole active set
+            assert set(out) == set(eng.active)
+            assert_parity(eng.kv, sorted(eng.active))
+    assert len(eng.kv._seqs[sid].path) >= 34
+    assert_parity(eng.kv, sorted(eng.active))
+    for s in sorted(eng.active):
+        # active[s] holds generated tokens; the newest one is not yet
+        # committed to the cache (it lands at the next step's scatter)
+        assert eng.kv.seq_length(s) == len(prompt_toks) + len(eng.active[s]) - 1
+    eng.finish_request(keeper)
+    eng.finish_request(sid)
+    assert eng.kv.blocks_in_use() == 0
+    assert eng.kv._seqs == {}
+
+
+def test_same_step_cow_onto_recycled_block_keeps_data():
+    """Regression: within one ``prepare_step`` batch, an earlier COW can
+    free a block that a later COW then recycles as its *destination*.
+    The batched data movement must still read every source's pre-step
+    content in sequence order — the corrupting order would copy the
+    recycled block after it was overwritten."""
+    cache = PagedKVCache(KV, scalable=True)
+    r = cache.new_seq()
+    cache.append_prefill(r, prompt(1, base=100.0), prompt(1, base=100.0))
+    c1 = cache.fork(r)
+    cache.free_seq(r)          # ref on r's block drops to c1 alone
+    s = cache.new_seq()
+    cache.append_prefill(s, prompt(1, base=200.0), prompt(1, base=200.0))
+    c2 = cache.fork(s)
+    cache.free_seq(s)
+    # c1's COW frees r's old block; c2's COW pops it back as destination
+    cache.prepare_step([c1, c2])
+    k1, _ = cache.gather(c1)
+    k2, _ = cache.gather(c2)
+    assert float(k1[0, 0, 0, 0]) == 100.0
+    assert float(k2[0, 0, 0, 0]) == 200.0
+    assert_parity(cache, [c1, c2])
+
+
+def test_same_step_chained_ancestor_descendant_cow():
+    """Regression companion: a descendant COW-ing the block its ancestor
+    COW-created *in the same step* must read the post-copy content
+    (vanilla propagation patches the descendant's resolve mid-batch)."""
+    cache = PagedKVCache(KV, scalable=False)
+    g = cache.new_seq()
+    cache.append_prefill(g, prompt(1, base=7.0), prompt(1, base=7.0))
+    a = cache.fork(g)
+    b = cache.fork(a)
+    cache.prepare_step([g, a, b])    # a: COW g's block; b: COW a's new block
+    ka, _ = cache.gather(a)
+    kb, _ = cache.gather(b)
+    assert float(ka[0, 0, 0, 0]) == 7.0
+    assert float(kb[0, 0, 0, 0]) == 7.0
+    assert_parity(cache, [g, a, b])
+
+
+def test_vanilla_root_lookup_count_matches_oracle():
+    """Regression: an unforked vanilla root is resolved directly by the
+    oracle (charges only allocated blocks); the fleet path's accounting
+    must match, not charge every page."""
+    cache = PagedKVCache(KV, scalable=False)
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(8), prompt(8))    # 2 blocks of 4
+    cache.lookup_count = 0
+    cache.block_table(sid)
+    _, _, oracle_lookups = cache._resolve_oracle(sid)
+    assert cache.lookup_count == oracle_lookups == 2
+
+
+def test_scalable_sids_past_bfi_width_keep_serving():
+    """Regression: sequence ids are lifetime-monotonic; past the 16-bit
+    bfi field they wrap in the (diagnostic) owner metadata but tables,
+    COW and content must stay exact — a long-running engine must not
+    die at 65k requests."""
+    from repro.core import format as fmt
+
+    cache = PagedKVCache(KV, scalable=True)
+    cache._next_sid = fmt.BFI_MASK + 3
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(6), prompt(6))
+    child = cache.fork(sid)
+    cache.append(child, tok(9.0), tok(9.0))
+    for s in (sid, child):
+        o_table, _, _ = cache._resolve_oracle(s)
+        np.testing.assert_array_equal(np.asarray(cache.block_table(s)),
+                                      o_table)
+    ck, _ = cache.gather(child)
+    assert float(ck[0, 6, 0, 0]) == 9.0
+    pk, _ = cache.gather(sid)
+    assert pk.shape[1] == 6
