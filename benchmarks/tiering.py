@@ -1,0 +1,267 @@
+"""Tiered-pool benchmark: live tenants at a fixed HBM budget (paper §6.3).
+
+The paper's scalable format keeps every snapshot layer's clusters in the
+backing store; at fleet granularity the analogous pressure is HBM — a
+depth-D chain pins ~D layers' worth of pool rows even though only the
+active COW layer is ever written. The ``TieredStore`` spills those frozen
+layers to host memory. This benchmark measures what that buys at a fixed
+device-pool budget, for depths {64, 500}:
+
+* **capacity** — tenants are admitted in waves; each wave builds its
+  depth-D chain (write + snapshot per layer). ``baseline`` admits into a
+  plain fleet until the allocator overflows; ``tiered`` runs a
+  ``MaintenanceScheduler`` demotion policy between steps, so frozen
+  layers spill and the next wave fits. ``tenants_live`` is the number of
+  fully-built, never-overflowed chains each mode sustains — the headline
+  is the tiered/baseline ratio (acceptance: >= 4x at depth 500).
+* **worst-tick latency** — every scheduler tick during the tiered run is
+  timed; budgeted demotion (``demote_rows_per_tick``) should keep the
+  worst tick far below ``stw_demote_ms``, the cost of spilling the whole
+  fleet in one stop-the-world transfer (measured on the baseline fleet).
+* **bit-verification** — every cell replays the writes into a numpy
+  shadow and requires ``fleet.read_tiered`` (tiered) / ``fleet.read``
+  (baseline, and tiered again after promoting a wave back) to match it
+  bit-for-bit, so the capacity numbers can never come from dropped data.
+
+Emits ``BENCH_tiering.json``.
+
+Run: ``PYTHONPATH=src python benchmarks/tiering.py``
+CI smoke: ``python benchmarks/tiering.py --smoke``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import emit, emit_json
+except ModuleNotFoundError:  # invoked as `python benchmarks/tiering.py`
+    import pathlib
+    import sys
+
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
+    from benchmarks.common import emit, emit_json
+from repro.core import fleet as fleet_lib
+from repro.core import metrics
+from repro.core.scheduler import MaintenanceScheduler
+from repro.core.store import TieredStore
+
+_QUANTUM = 10
+
+
+def make_spec(n_tenants: int, depth: int, *, wave: int,
+              n_pages: int, page_size: int) -> fleet_lib.FleetSpec:
+    """Pool sized to hold ONE wave of depth-``depth`` chains (plus two
+    quanta of slack) — the fixed device budget both modes run under."""
+    per_tenant_q = -(-depth // _QUANTUM)
+    return fleet_lib.FleetSpec(
+        n_tenants=n_tenants,
+        n_pages=n_pages,
+        page_size=page_size,
+        max_chain=depth + 1,
+        pool_capacity=(wave * per_tenant_q + 2) * _QUANTUM,
+        lease_quantum=_QUANTUM,
+        l2_per_table=n_pages,
+        slice_len=1,
+    )
+
+
+def _overflowed(fl) -> int:
+    return int(np.sum(np.asarray(fl.overflow)))
+
+
+def build_waves(spec, *, depth: int, wave: int, sched=None,
+                tick_every: int = 16):
+    """Admit tenants wave by wave, building each wave's depth-``depth``
+    chain layer by layer (one masked write + snapshot per layer). With a
+    scheduler, its demotion policy ticks every ``tick_every`` layers and
+    drains between waves. Stops at the first overflow. Returns
+    ``(fleet, live_tenants, shadow, tick_latencies)`` where ``shadow`` is
+    the expected top-layer content per page (numpy, the bit-verification
+    reference) and ``live_tenants`` counts fully-built clean chains."""
+    fl = fleet_lib.create(spec)
+    shadow = np.zeros((spec.n_pages, spec.page_size), np.float32)
+    written = np.zeros(spec.n_pages, bool)
+    lat: list[float] = []
+    live = 0
+
+    def tick():
+        t0 = time.perf_counter()
+        sched.tick()
+        jax.block_until_ready(sched.fleet.l1)
+        lat.append(time.perf_counter() - t0)
+
+    for start in range(0, spec.n_tenants, wave):
+        members = list(range(start, min(start + wave, spec.n_tenants)))
+        mask = np.zeros(spec.n_tenants, bool)
+        mask[members] = True
+        jmask = jnp.asarray(mask)
+        for layer in range(depth):
+            pid = layer % spec.n_pages
+            ids = jnp.full((spec.n_tenants, 1), pid, jnp.int32)
+            data = jnp.full((spec.n_tenants, 1, spec.page_size),
+                            float(layer + 1), jnp.float32)
+            fl = fleet_lib.write(fl, ids, data, mask=jmask)
+            fl = fleet_lib.snapshot(fl, mask=jmask)
+            if sched is not None:
+                sched.fleet = fl
+                if (layer + 1) % tick_every == 0:
+                    tick()
+                fl = sched.fleet
+        if start == 0:   # identical for every wave: last write of a page wins
+            for layer in range(depth):
+                shadow[layer % spec.n_pages] = float(layer + 1)
+                written[layer % spec.n_pages] = True
+        if sched is not None:
+            sched.fleet = fl
+            while True:   # drain: spill everything frozen before admitting
+                tick()
+                if sched._over_budget(fleet_lib.tenant_stats(sched.fleet)) == 0:
+                    break
+                if not sched._demote_candidates(
+                        fleet_lib.tenant_stats(sched.fleet)):
+                    break
+            fl = sched.fleet
+        if _overflowed(fl):
+            break        # this wave did not fit: its partial chains don't count
+        live = start + len(members)
+    return fl, live, (shadow, written), lat
+
+
+def _verify_cell(name: str, data, found, live: int, shadow) -> None:
+    """Bit-compare resolved top-layer reads of every live tenant against
+    the replayed write shadow. Raises — a capacity number that lost data
+    must never make it into the artifact."""
+    expect, written = shadow
+    data = np.asarray(data)
+    found = np.asarray(found)
+    for t in range(live):
+        if not np.array_equal(found[t], written):
+            raise AssertionError(f"{name}: tenant {t} allocation map wrong")
+        got = data[t][written]
+        if not np.array_equal(got.view(np.uint8),
+                              expect[written].view(np.uint8)):
+            raise AssertionError(f"{name}: tenant {t} content mismatch")
+
+
+def bench_cell(depth: int, *, n_tenants: int, wave: int, n_pages: int,
+               page_size: int, rows_per_tick: int,
+               tick_every: int) -> list[dict]:
+    spec = make_spec(n_tenants, depth, wave=wave, n_pages=n_pages,
+                     page_size=page_size)
+    grid = jnp.broadcast_to(jnp.arange(n_pages, dtype=jnp.int32)[None],
+                            (n_tenants, n_pages))
+    out = []
+
+    # --- baseline: all-HBM, admit until the allocator overflows ------------
+    fl, live_b, shadow, _ = build_waves(spec, depth=depth, wave=wave)
+    data, res = fleet_lib.read(fl, grid)
+    _verify_cell(f"baseline d{depth}", data,
+                 np.asarray(res.found) & ~np.asarray(res.zero),
+                 live_b, shadow)
+    # stop-the-world contrast: spill the whole baseline fleet in one go
+    t0 = time.perf_counter()
+    _, rep = fleet_lib.demote_tenants(fl, TieredStore.for_fleet(spec),
+                                      list(range(n_tenants)))
+    stw_ms = (time.perf_counter() - t0) * 1e3
+    out.append(dict(
+        mode="baseline", depth=depth, tenants_live=live_b,
+        pool_rows=spec.pool_capacity, page_size=page_size,
+        worst_tick_ms=None, mean_tick_ms=None, ticks=0,
+        rows_demoted=0, rows_promoted=0, host_rows=0,
+        stw_demote_ms=stw_ms, stw_rows=rep["rows_demoted"],
+        verified=True,
+    ))
+    emit(f"tier_baseline_d{depth}", stw_ms * 1e3,
+         f"live={live_b};pool={spec.pool_capacity}")
+
+    # --- tiered: scheduler demotion policy under the same pool -------------
+    store = TieredStore.for_fleet(spec)
+    sched = MaintenanceScheduler(
+        fleet_lib.create(spec),
+        stream_chain_threshold=10**9,     # isolate the demotion policy
+        store=store, device_page_budget=0,
+        demote_rows_per_tick=rows_per_tick,
+    )
+    fl, live_t, shadow, lat = build_waves(spec, depth=depth, wave=wave,
+                                          sched=sched, tick_every=tick_every)
+    data, res = fleet_lib.read_tiered(fl, store, grid)
+    _verify_cell(f"tiered d{depth}", data,
+                 np.asarray(res.found) & ~np.asarray(res.zero),
+                 live_t, shadow)
+    # promote one wave back and verify the device-resident read too
+    back = list(range(min(wave, live_t)))
+    t0 = time.perf_counter()
+    fl, _ = fleet_lib.promote_tenants(fl, store, back)
+    promote_ms = (time.perf_counter() - t0) * 1e3
+    hot, hres = fleet_lib.read(fl, grid)
+    _verify_cell(f"promoted d{depth}", hot,
+                 np.asarray(hres.found) & ~np.asarray(hres.zero),
+                 len(back), shadow)
+    resid = metrics.tier_residency(fl, store)
+    rec = dict(
+        mode="tiered", depth=depth, tenants_live=live_t,
+        pool_rows=spec.pool_capacity, page_size=page_size,
+        worst_tick_ms=max(lat) * 1e3, mean_tick_ms=float(np.mean(lat)) * 1e3,
+        ticks=len(lat), rows_demoted=resid.demoted_rows,
+        rows_promoted=resid.promoted_rows, host_rows=resid.host_rows,
+        stw_demote_ms=stw_ms, promote_wave_ms=promote_ms,
+        ratio_vs_baseline=live_t / max(live_b, 1),
+        verified=True,
+    )
+    out.append(rec)
+    emit(f"tier_tiered_d{depth}", rec["worst_tick_ms"] * 1e3,
+         f"live={live_t};ratio={rec['ratio_vs_baseline']:.1f};"
+         f"host_rows={resid.host_rows}")
+    return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--depths", type=int, nargs="+", default=[64, 500])
+    p.add_argument("--tenants", type=int, default=32)
+    p.add_argument("--wave", type=int, default=4,
+                   help="tenants admitted (and chains built) per wave")
+    p.add_argument("--pages", type=int, default=64)
+    p.add_argument("--page-size", type=int, default=32)
+    p.add_argument("--rows-per-tick", type=int, default=256,
+                   help="scheduler demotion budget per tick")
+    p.add_argument("--tick-every", type=int, default=16,
+                   help="build layers between in-band scheduler ticks")
+    p.add_argument("--json", default="BENCH_tiering.json",
+                   help="output artifact path ('' disables)")
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI configuration (depth 500 stays in — the "
+                        "acceptance ratio is measured there)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.tenants, args.page_size, args.pages = 24, 8, 64
+
+    results, ok = [], True
+    for d in args.depths:
+        cell = bench_cell(
+            d, n_tenants=args.tenants, wave=args.wave, n_pages=args.pages,
+            page_size=args.page_size, rows_per_tick=args.rows_per_tick,
+            tick_every=args.tick_every,
+        )
+        results.extend(cell)
+        tiered = next(r for r in cell if r["mode"] == "tiered")
+        if d >= 500 and tiered["ratio_vs_baseline"] < 4:
+            ok = False
+            print(f"WARNING: depth-{d} tiered/baseline live-tenant ratio "
+                  f"{tiered['ratio_vs_baseline']:.1f} below the 4x target")
+    if args.json:
+        emit_json(args.json, "tiering", results, tenants=args.tenants,
+                  wave=args.wave, rows_per_tick=args.rows_per_tick)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

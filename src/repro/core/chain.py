@@ -441,7 +441,7 @@ def convert_to_scalable(chain: Chain) -> Chain:
     res = resolve.resolve_vanilla(chain, jnp.arange(spec.n_pages, dtype=jnp.int32))
     entries = fmt.pack_entry(
         res.ptr, res.owner.astype(jnp.uint32),
-        allocated=res.found, bfi_valid=True, zero=res.zero,
+        allocated=res.found, bfi_valid=True, zero=res.zero, cold=res.cold,
     )
     active = int(chain.length) - 1
     l2 = chain.l2.at[active].set(entries)

@@ -10,9 +10,13 @@ we keep two u32 words to stay in JAX's default 32-bit world):
 
 ``word0`` (data pointer + cluster flags)::
 
-    bits [0, 28)   page_ptr   — row index into the global page pool
+    bits [0, 28)   page_ptr   — row index into the global page pool; for a
+                   COLD entry, a row index into the host tier instead
     bit  28        ENCRYPTED  — feature-preservation flag (carried, not used)
-    bit  29        COMPRESSED — feature-preservation flag (carried, not used)
+    bit  29        COLD       — tier-residency bit: the page was demoted to
+                   the host tier and ``ptr`` addresses the ``TieredStore``
+                   host pool, not the device pool (repurposes the unused
+                   COMPRESSED slot; see ``docs/memory.md``)
     bit  30        ZERO       — "reads as zeros" cluster (qcow2 v3 feature)
     bit  31        ALLOCATED  — entry describes an allocated page
 
@@ -38,7 +42,11 @@ PTR_BITS = 28
 PTR_MASK = (1 << PTR_BITS) - 1
 
 FLAG_ENCRYPTED = 1 << 28
-FLAG_COMPRESSED = 1 << 29
+# Tier-residency bit: repurposes the (never-set) qcow2 COMPRESSED slot.
+# When set, ``ptr`` addresses the TieredStore host tier, not the device
+# pool — resolvers surface it as ``ResolveResult.cold`` so data-plane
+# gathers mask cold hits and maintenance promotes before the read.
+FLAG_COLD = 1 << 29
 FLAG_ZERO = 1 << 30
 FLAG_ALLOCATED = 1 << 31
 
@@ -52,19 +60,22 @@ MAX_POOL_ROWS = 1 << PTR_BITS
 _U32 = jnp.uint32
 
 
-def pack_entry(ptr, bfi, *, allocated, bfi_valid, zero=False):
+def pack_entry(ptr, bfi, *, allocated, bfi_valid, zero=False, cold=False):
     """Pack entry fields into a ``(..., 2) uint32`` array.
 
     ``ptr``/``bfi`` are integer arrays (broadcastable); ``allocated``,
-    ``bfi_valid``, ``zero`` are boolean arrays or python bools.
+    ``bfi_valid``, ``zero``, ``cold`` are boolean arrays or python bools.
+    A COLD entry's ``ptr`` addresses the host tier (see module docstring).
     """
     ptr = jnp.asarray(ptr, _U32) & _U32(PTR_MASK)
     bfi = jnp.asarray(bfi, _U32) & _U32(BFI_MASK)
     allocated = jnp.asarray(allocated, bool)
     bfi_valid = jnp.asarray(bfi_valid, bool)
     zero = jnp.asarray(zero, bool)
+    cold = jnp.asarray(cold, bool)
     w0 = ptr | jnp.where(allocated, _U32(FLAG_ALLOCATED), _U32(0))
     w0 = w0 | jnp.where(zero, _U32(FLAG_ZERO), _U32(0))
+    w0 = w0 | jnp.where(cold, _U32(FLAG_COLD), _U32(0))
     w1 = bfi | jnp.where(bfi_valid, _U32(FLAG_BFI_VALID), _U32(0))
     # An unallocated entry is all-zeros (Qcow2 convention).
     w0 = jnp.where(allocated, w0, _U32(0))
@@ -87,6 +98,11 @@ def entry_allocated(entries):
 
 def entry_zero(entries):
     return (entries[..., 0] & _U32(FLAG_ZERO)) != 0
+
+
+def entry_cold(entries):
+    """Tier-residency bit: True where ``ptr`` addresses the host tier."""
+    return (entries[..., 0] & _U32(FLAG_COLD)) != 0
 
 
 def entry_bfi(entries):

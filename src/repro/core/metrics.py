@@ -14,6 +14,13 @@ is the claim being reproduced, so the constants are parameters.
 Eq. 2 — per-snapshot metadata overhead of the scalable format::
 
     S_sq = S_vq + disk_size / cluster_size * l2_entry_size
+
+Tiering (paper §6.3's 15x memory headline, fleet-granularity analogue):
+``tier_residency`` snapshots the two-tier pool occupancy off a fleet +
+``TieredStore`` pair — the counters benchmarks and tests assert on
+instead of peeking at allocator internals — and ``tiered_pool_bytes``
+is the analytical bytes-resident-per-tenant model behind the cost table
+in ``docs/memory.md``.
 """
 
 from __future__ import annotations
@@ -21,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import format as fmt
 from repro.core.cache import SimTrace
@@ -74,6 +82,54 @@ def trace_latencies(trace: SimTrace, c: CostConstants = CostConstants()):
         + trace.misses.astype(jnp.float32) * (c.t_d + c.t_l)
         + trace.hit_unallocated.astype(jnp.float32) * c.t_f
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class TierResidency:
+    """One observation of the two-tier pool occupancy (see module doc)."""
+
+    device_rows: int      # pool rows currently leased to tenants (HBM)
+    host_rows: int        # rows resident in the TieredStore cold tier
+    cold_tenants: int     # tenants holding at least one demoted row
+    demoted_rows: int     # lifetime device -> host transfers (pages)
+    promoted_rows: int    # lifetime host -> device transfers (pages)
+
+
+def tier_residency(fleet, store=None) -> TierResidency:
+    """Tier-residency counters from a fleet (+ optional ``TieredStore``).
+
+    The supported observability surface for tiering: benchmarks and
+    tests assert on these instead of reading allocator internals. With
+    ``store=None`` the host-side counters read as zero (an untiered
+    fleet is just an all-device pool).
+    """
+    cold = np.asarray(fleet.cold_count)
+    return TierResidency(
+        device_rows=int(np.sum(np.asarray(fleet.alloc_count))),
+        host_rows=0 if store is None else store.host_rows_in_use(),
+        cold_tenants=int(np.sum(cold > 0)),
+        demoted_rows=0 if store is None else store.demoted_rows,
+        promoted_rows=0 if store is None else store.promoted_rows,
+    )
+
+
+def tiered_pool_bytes(spec: ChainSpec, chain_length: int,
+                      rows_per_layer: int, *, tiered: bool) -> int:
+    """Data-pool bytes resident in HBM for one tenant at depth D.
+
+    Each snapshot layer freezes ``rows_per_layer`` pool rows (the pages
+    it wrote). All-HBM, every layer's rows stay device-resident:
+    ``D * rows_per_layer`` pages. Tiered, the steady state keeps only
+    the active layer's rows hot — the demotion policy spills every
+    immutable layer — so residency is ``rows_per_layer`` pages,
+    independent of D. The ratio is the paper's deep-chain memory win
+    (§6.3); ``benchmarks/tiering.py`` measures the realized ratio, this
+    is the model it is checked against. Index metadata is not included
+    (see ``index_bytes`` — it is identical in both configurations).
+    """
+    itemsize = jnp.zeros((), spec.dtype).dtype.itemsize
+    rows = rows_per_layer * (1 if tiered else chain_length)
+    return rows * spec.page_size * itemsize
 
 
 def index_bytes(spec: ChainSpec, chain_length: int, *, scalable: bool) -> int:

@@ -47,10 +47,13 @@ from repro.kernels.chain_resolve import ops as _kernel_ops
 
 class ResolveResult(NamedTuple):
     owner: jax.Array    # (B,) int32 — owning snapshot index; -1 if not found
-    ptr: jax.Array      # (B,) uint32 — pool row (valid only where found)
+    ptr: jax.Array      # (B,) uint32 — pool row (valid only where found);
+                        # a host-tier row where ``cold``
     found: jax.Array    # (B,) bool
     zero: jax.Array     # (B,) bool — qcow2 "zero cluster"
     lookups: jax.Array  # (B,) int32 — #L2 consultations performed (cost)
+    cold: jax.Array     # (B,) bool — hit lives in the host tier (FLAG_COLD);
+                        # device gathers must mask it, promotion makes it hot
 
 
 def resolve_vanilla_tables(l2: jax.Array, length: jax.Array,
@@ -79,6 +82,7 @@ def resolve_vanilla_tables(l2: jax.Array, length: jax.Array,
         found=found,
         zero=fmt.entry_zero(picked) & found,
         lookups=lookups.astype(jnp.int32),
+        cold=fmt.entry_cold(picked) & found,
     )
 
 
@@ -97,6 +101,7 @@ def resolve_direct_tables(l2: jax.Array, length: jax.Array,
         found=alloc & valid,
         zero=fmt.entry_zero(entries) & alloc,
         lookups=jnp.ones_like(page_ids),
+        cold=fmt.entry_cold(entries) & alloc,
     )
 
 
@@ -118,6 +123,7 @@ def combine_auto(trust: jax.Array, direct: ResolveResult,
         found=pick(direct.found, walk.found),
         zero=pick(direct.zero, walk.zero),
         lookups=pick(direct.lookups, walk.lookups),
+        cold=pick(direct.cold, walk.cold),
     )
 
 
@@ -166,9 +172,10 @@ def resolve_vanilla_stacked(l2: jax.Array, lengths: jax.Array,
         owner=owner.astype(jnp.int32),
         ptr=hit & jnp.uint32(fmt.PTR_MASK),
         found=found,
-        # a miss returns hit == 0, so the ZERO bit reads as False there
+        # a miss returns hit == 0, so the ZERO/COLD bits read as False there
         zero=(hit & jnp.uint32(fmt.FLAG_ZERO)) != 0,
         lookups=jnp.where(found, ln - owner, ln).astype(jnp.int32),
+        cold=(hit & jnp.uint32(fmt.FLAG_COLD)) != 0,
     )
 
 
@@ -195,6 +202,7 @@ def resolve_direct_stacked(l2: jax.Array, lengths: jax.Array,
         found=alloc & ((h1 & jnp.uint32(fmt.FLAG_BFI_VALID)) != 0),
         zero=((h0 & jnp.uint32(fmt.FLAG_ZERO)) != 0) & alloc,
         lookups=jnp.ones_like(ids),
+        cold=((h0 & jnp.uint32(fmt.FLAG_COLD)) != 0) & alloc,
     )
 
 

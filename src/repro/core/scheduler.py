@@ -30,14 +30,27 @@ pick) — so any persistent candidate eventually outranks the churners and
 gets its slice. ``aging_weight=0`` restores pure occupancy order.
 
 **No-progress parking.** A tick that touches a tenant without changing
-its occupancy fingerprint (chain length, rows held, quanta held) parks
-that tenant: it is skipped by future ticks until something about it
-changes (a write, a snapshot, a reclamation elsewhere). Without parking,
-a length-2 chain (streaming shortens nothing) or a latched overflow with
-nothing reclaimable would be re-picked and futilely re-streamed every
-tick, and ``drain()`` would never observe an empty backlog. Parking is
-what makes the queue converge; progress anywhere un-parks automatically
-because the fingerprint no longer matches.
+its occupancy fingerprint (chain length, rows held, quanta held, rows
+demoted) parks that tenant: it is skipped by future ticks until
+something about it changes (a write, a snapshot, a reclamation
+elsewhere). Without parking, a length-2 chain (streaming shortens
+nothing) or a latched overflow with nothing reclaimable would be
+re-picked and futilely re-streamed every tick, and ``drain()`` would
+never observe an empty backlog. Parking is what makes the queue
+converge; progress anywhere un-parks automatically because the
+fingerprint no longer matches.
+
+**Demotion policy (tiering).** With a ``TieredStore`` and a
+``device_page_budget``, each tick also checks the fleet's device-row
+footprint against the budget and, while over it, demotes immutable
+snapshot-layer pages to the host tier (``fleet.demote_tenants``) —
+coldest layer first within a tenant, longest-chain tenants first across
+the fleet (deep chains pin the most frozen state), and at most
+``demote_rows_per_tick`` rows per tick so the transfer cost is paid in
+budgeted slices like everything else here. The active COW layer is never
+demoted (enforced by ``demote_tenants`` itself). Tenants whose demotion
+attempt moves nothing are parked on their fingerprint like wedged
+streams. See ``docs/memory.md``.
 """
 
 from __future__ import annotations
@@ -65,12 +78,18 @@ class MaintenanceScheduler:
     not clear a tenant's ``overflow``.
     ``aging_weight``: chain-length-equivalents of priority a passed-over
     candidate gains per tick (the starvation guard); 0 disables aging.
+    ``store`` + ``device_page_budget``: enable the tiering demotion
+    policy — while the fleet holds more device rows than the budget,
+    ticks demote immutable-layer pages into the ``TieredStore``, at most
+    ``demote_rows_per_tick`` rows per tick.
     """
 
     def __init__(self, fleet: ChainFleet, *, max_tenants_per_tick: int = 1,
                  stream_chain_threshold: int = 3,
                  compact_on_overflow: bool = True,
-                 aging_weight: int = 1):
+                 aging_weight: int = 1,
+                 store=None, device_page_budget: int | None = None,
+                 demote_rows_per_tick: int = 64):
         if max_tenants_per_tick < 1:
             raise ValueError("max_tenants_per_tick must be >= 1")
         if aging_weight < 0:
@@ -80,11 +99,24 @@ class MaintenanceScheduler:
                 "stream_chain_threshold must be >= 2 (a length-1 chain "
                 "has nothing below its active volume to merge)"
             )
+        if device_page_budget is not None and store is None:
+            raise ValueError(
+                "device_page_budget needs a TieredStore to demote into"
+            )
+        if demote_rows_per_tick < 1:
+            raise ValueError("demote_rows_per_tick must be >= 1")
         self.fleet = fleet
         self.max_tenants_per_tick = max_tenants_per_tick
         self.stream_chain_threshold = stream_chain_threshold
         self.compact_on_overflow = compact_on_overflow
         self.aging_weight = aging_weight
+        self.store = store
+        self.device_page_budget = device_page_budget
+        self.demote_rows_per_tick = demote_rows_per_tick
+        self.rows_demoted = 0
+        # tenants whose demotion attempt moved nothing, parked at their
+        # fingerprint (same convergence mechanism as _wedged)
+        self._demote_parked: dict[int, tuple] = {}
         # ticks spent as an unpicked candidate, per tenant: the priority
         # boost that guarantees no candidate starves behind heavier
         # tenants that keep regrowing. Reset when the tenant is picked.
@@ -105,7 +137,7 @@ class MaintenanceScheduler:
     def _fingerprints(self, st) -> dict[int, tuple]:
         return {
             t: (int(st["length"][t]), int(st["alloc_count"][t]),
-                int(st["lease_count"][t]))
+                int(st["lease_count"][t]), int(st["cold_count"][t]))
             for t in range(self.fleet.spec.n_tenants)
         }
 
@@ -145,6 +177,9 @@ class MaintenanceScheduler:
             (st["length"] >= self.stream_chain_threshold)
             | st["overflow"] | st["snap_dropped"]
         )
+        # tenants holding demoted pages can't stream (the merge would
+        # strand their host rows) — promotion un-parks them naturally
+        need &= st["cold_count"] == 0
         age = np.asarray([self._age.get(t, 0)
                           for t in range(len(need))], np.int64)
         rank = st["length"].astype(np.int64) + self.aging_weight * age
@@ -160,23 +195,79 @@ class MaintenanceScheduler:
         return [int(t) for t in np.flatnonzero(st["overflow"])
                 if int(t) not in self._wedged]
 
+    # -- tiering demotion policy ---------------------------------------------
+
+    def _over_budget(self, st) -> int:
+        """Device rows above the HBM page budget (0 when policy is off)."""
+        if self.store is None or self.device_page_budget is None:
+            return 0
+        return max(int(np.sum(st["alloc_count"])) - self.device_page_budget, 0)
+
+    def _demote_candidates(self, st) -> list[int]:
+        """Tenants with demotable frozen state, coldest (longest chain)
+        first; parked no-progress tenants are skipped until they change."""
+        fp = self._fingerprints(st)
+        self._demote_parked = {t: f for t, f in self._demote_parked.items()
+                               if fp[t] == f}
+        need = (st["length"] >= 2) & (st["alloc_count"] > 0)
+        order = np.lexsort((-st["alloc_count"], -st["length"]))
+        return [int(t) for t in order
+                if need[t] and int(t) not in self._demote_parked]
+
+    def _demote_tick(self, st) -> int:
+        """One budgeted demotion slice: spill up to
+        ``demote_rows_per_tick`` rows across the candidates in a single
+        batched ``fleet.demote_tenants`` call (coldest layers first
+        within each tenant; one L2 sync + one repack per tick)."""
+        remaining = min(self.demote_rows_per_tick, self._over_budget(st))
+        if remaining <= 0:
+            return 0
+        fp = self._fingerprints(st)
+        cands = self._demote_candidates(st)
+        if not cands:
+            return 0
+        self.fleet, rep = fleet_lib.demote_tenants(
+            self.fleet, self.store, cands, max_rows=remaining
+        )
+        done = rep["rows_demoted"]
+        if done < remaining:
+            # the budget was not exhausted, so every candidate the call
+            # left untouched has nothing below its active layer to
+            # spill: park it at its fingerprint so the policy converges
+            # instead of re-scanning it every tick. (When the budget IS
+            # exhausted, untouched candidates may simply not have been
+            # reached — parking them would strand their frozen rows.)
+            moved = set(rep["tenants"])
+            for t in cands:
+                if t not in moved:
+                    self._demote_parked[t] = fp[t]
+        self.rows_demoted += done
+        return done
+
     def backlog(self, st=None) -> int:
-        """Outstanding maintenance work: stream candidates plus tenants
-        only the compact fallback can help."""
+        """Outstanding maintenance work: stream candidates, tenants only
+        the compact fallback can help, plus tenants the demotion policy
+        still needs to spill while over the device budget."""
         st = fleet_lib.tenant_stats(self.fleet) if st is None else st
-        return len(set(self.candidates(st)) | set(self._compactable(st)))
+        work = set(self.candidates(st)) | set(self._compactable(st))
+        if self._over_budget(st) > 0:
+            work |= set(self._demote_candidates(st))
+        return len(work)
 
     # -- one tick of background work -----------------------------------------
 
     def tick(self) -> dict:
-        """Run one maintenance slice: stream at most K tenants, compact
-        the ones wedged on overflow. Returns a report of the work done.
+        """Run one maintenance slice: demote a budgeted row batch if over
+        the device page budget, stream at most K tenants, compact the
+        ones wedged on overflow. Returns a report of the work done.
         A drained (or fully parked) queue ticks for free: one
-        tenant_stats sync, no streaming, no repack."""
+        tenant_stats sync, no streaming, no repack, no transfers."""
         st0 = fleet_lib.tenant_stats(self.fleet)
         cands = self.candidates(st0)
         picks = cands[: self.max_tenants_per_tick]
         compactable = self._compactable(st0)
+        need_demote = (self._over_budget(st0) > 0
+                       and bool(self._demote_candidates(st0)))
         self.ticks += 1
         # starvation guard: passed-over candidates gain priority, picked
         # ones reset — any persistent candidate is eventually served. A
@@ -189,13 +280,17 @@ class MaintenanceScheduler:
             self._age[t] = self._age.get(t, 0) + 1
         for t in picks:
             self._age.pop(t, None)
-        if not picks and not compactable:
+        if not picks and not compactable and not need_demote:
             return dict(streamed=[], compacted=False, quanta_reclaimed=0,
-                        backlog=0)
+                        rows_demoted=0, backlog=0)
 
         fp_before = self._fingerprints(st0)
         free_before = self._free_quanta(st0)
         n_t = self.fleet.spec.n_tenants
+        # spill first: demotion frees device rows through the same
+        # _reclaim repack streaming uses, so a single tick's transfers
+        # stay bounded by demote_rows_per_tick + the stream budget
+        demoted = self._demote_tick(st0) if need_demote else 0
         if picks:
             mask = np.zeros(n_t, bool)
             mask[picks] = True
@@ -230,6 +325,7 @@ class MaintenanceScheduler:
             streamed=picks,
             compacted=compacted,
             quanta_reclaimed=reclaimed,
+            rows_demoted=demoted,
             backlog=self.backlog(st1),
         )
 
@@ -244,11 +340,15 @@ class MaintenanceScheduler:
 
     def stats(self) -> dict:
         """Lifetime counters plus the fleet's current occupancy."""
-        return dict(
+        out = dict(
             ticks=self.ticks,
             tenants_streamed=self.tenants_streamed,
             compactions=self.compactions,
             quanta_reclaimed=self.quanta_reclaimed,
+            rows_demoted=self.rows_demoted,
             max_wait=max(self._age.values(), default=0),
             **fleet_lib.fleet_stats(self.fleet),
         )
+        if self.store is not None:
+            out.update(self.store.stats())
+        return out

@@ -11,6 +11,12 @@ This is the substrate both integrations build on:
   store at every checkpoint — an incremental (delta) checkpoint chain;
 * ``repro.kvcache`` stores KV pages and snapshots at sequence-fork points —
   a prefix-sharing chain.
+
+``TieredStore`` is the second tier behind the device pool: a host (numpy)
+page array that cold snapshot layers are demoted into by the maintenance
+plane (``fleet.demote_tenants``), addressed by the same 28-bit ``ptr``
+field under the ``FLAG_COLD`` residency bit. See ``docs/memory.md`` for
+the end-to-end memory model.
 """
 
 from __future__ import annotations
@@ -19,8 +25,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import chain as chain_lib
+from repro.core import format as fmt
 from repro.core import resolve as resolve_lib
 from repro.core.chain import Chain, ChainSpec
 
@@ -28,14 +36,108 @@ from repro.core.chain import Chain, ChainSpec
 def gather_pages(pool: jax.Array, res: resolve_lib.ResolveResult) -> jax.Array:
     """Gather resolved pages from a pool; unallocated/ZERO read as zeros.
 
+    Cold hits (``res.cold`` — pages demoted to the host tier) also read as
+    zeros here: their ``ptr`` addresses the ``TieredStore`` host pool, not
+    the device pool, so dereferencing it would alias an unrelated row.
+    Callers that need cold data promote first (``fleet.promote_tenants``)
+    or read through ``fleet.read_tiered``.
+
     Shape-polymorphic over leading batch axes: serves both the single-chain
     ``read`` ((B,) results) and the fleet's batched read ((T, B) results —
     the pool is global, so one gather covers every tenant).
     """
-    rows = jnp.where(res.found & ~res.zero, res.ptr, 0).astype(jnp.int32)
+    ok = res.found & ~res.zero & ~res.cold
+    rows = jnp.where(ok, res.ptr, 0).astype(jnp.int32)
     data = pool[rows]
-    ok = (res.found & ~res.zero)[..., None]
-    return jnp.where(ok, data, jnp.zeros_like(data))
+    return jnp.where(ok[..., None], data, jnp.zeros_like(data))
+
+
+class TieredStore:
+    """The host (numpy) cold tier behind a fleet's device page pool.
+
+    A flat page array with its own row allocator: ``fleet.demote_tenants``
+    copies whole immutable snapshot layers out of the device pool into
+    host rows allocated here and rewrites the evicted L2 entries to
+    ``(host_row | FLAG_COLD)``; ``fleet.promote_tenants`` moves them back
+    and returns the host rows to this free list. Rows are addressed by
+    the entry's 28-bit ``ptr`` field, so the two tiers share one pointer
+    format and an entry's ``(cold, ptr)`` pair is a complete address.
+
+    Capacity grows by doubling on demand (host DRAM is the cheap tier;
+    the device pool is the budgeted one). All methods are host-side, like
+    the rest of the maintenance plane. Lifetime transfer counters
+    (``demoted_rows``/``promoted_rows``) feed ``metrics.tier_residency``.
+    """
+
+    def __init__(self, page_size: int, dtype=jnp.float32, *,
+                 initial_rows: int = 0):
+        self.page_size = int(page_size)
+        self.dtype = dtype
+        cap = max(int(initial_rows), 1)
+        self._data = np.zeros((cap, self.page_size), np.dtype(dtype))
+        self._free: list[int] = []
+        self._top = 0            # high-water mark of ever-allocated rows
+        self.demoted_rows = 0    # lifetime pages moved device -> host
+        self.promoted_rows = 0   # lifetime pages moved host -> device
+
+    @classmethod
+    def for_fleet(cls, spec) -> "TieredStore":
+        """A cold tier matching a ``FleetSpec``'s page geometry."""
+        return cls(spec.page_size, spec.dtype,
+                   initial_rows=spec.pool_capacity)
+
+    def host_rows_in_use(self) -> int:
+        return self._top - len(self._free)
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Allocate ``n`` host rows; returns their ids (int64, sorted-ish).
+
+        Free-listed rows are reused first; fresh rows extend the array
+        (doubling). Raises if a row id would not fit the 28-bit ``ptr``
+        field — the shared pointer format is the one hard capacity limit.
+        """
+        take = min(n, len(self._free))
+        rows = [self._free.pop() for _ in range(take)]
+        fresh = n - take
+        if fresh:
+            if self._top + fresh > fmt.MAX_POOL_ROWS:
+                raise RuntimeError(
+                    "host tier exhausted: row ids no longer fit the "
+                    "28-bit ptr field"
+                )
+            while self._data.shape[0] < self._top + fresh:
+                grown = np.zeros((self._data.shape[0] * 2, self.page_size),
+                                 self._data.dtype)
+                grown[: self._data.shape[0]] = self._data
+                self._data = grown
+            rows.extend(range(self._top, self._top + fresh))
+            self._top += fresh
+        return np.asarray(rows, np.int64)
+
+    def put(self, rows: np.ndarray, data: np.ndarray) -> None:
+        """Fill host rows (a demotion's data movement)."""
+        rows = np.asarray(rows, np.int64)
+        self._data[rows] = np.asarray(data, self._data.dtype)
+        self.demoted_rows += int(rows.size)
+
+    def get(self, rows: np.ndarray) -> np.ndarray:
+        """Read host rows (a promotion's source, or a tiered read)."""
+        return self._data[np.asarray(rows, np.int64)]
+
+    def free(self, rows: np.ndarray) -> None:
+        """Return host rows to the free list (promotion / tenant free)."""
+        rows = np.atleast_1d(np.asarray(rows, np.int64))
+        if rows.size and (np.min(rows) < 0 or np.max(rows) >= self._top):
+            raise ValueError("freeing host rows that were never allocated")
+        self._free.extend(int(r) for r in rows)
+
+    def stats(self) -> dict:
+        return dict(
+            host_rows_in_use=self.host_rows_in_use(),
+            host_rows_capacity=int(self._data.shape[0]),
+            demoted_rows=self.demoted_rows,
+            promoted_rows=self.promoted_rows,
+        )
 
 
 @partial(jax.jit, static_argnames=("method",))

@@ -42,6 +42,18 @@ refcounted free list; shared-prefix blocks cross tenant boundaries, which
 leases forbid) — ``free_tenant`` still retires each sequence's tenant row
 on ``free_seq``. Never run ``fleet.stream_tenants``/``compact`` on this
 fleet: forked tenants share rows by design.
+
+**Tiering.** A parked sequence's exclusively-owned KV blocks can spill to
+host memory (``demote_seq``): the data leaves ``pool_k``/``pool_v`` (the
+blocks return to the free list), the owning L2 entries are stamped with
+the ``FLAG_COLD`` residency bit, and the stacked resolve reports the
+cold positions. Promotion is lazy and on-demand: every table-producing
+path (``prepare_step``, ``batched_tables``, ``block_table``, the write
+preps) transparently calls ``promote_seq`` on involved sequences first,
+so a resumed deep fork pays its transfer on the first step it actually
+joins rather than stalling ``Engine.resume_request``. Shared-prefix
+blocks (refcount > 1) and blocks visible to forked descendants never
+spill — exclusivity is what makes the host copy the unique owner.
 """
 
 from __future__ import annotations
@@ -81,6 +93,7 @@ class _Seq:
     children: int = 0        # seqs (live or tombstoned) naming us as parent
     tenant: Optional[int] = None  # fleet row while unfreed; None once freed
     path: tuple = ()         # fork ancestry, root first, self last
+    cold: set = dataclasses.field(default_factory=set)  # host-spilled blks
 
 
 #: Initial fleet geometry; both axes grow by doubling on demand.
@@ -90,13 +103,16 @@ _INIT_CHAIN = 8
 
 @partial(jax.jit, static_argnames=("method",))
 def _fleet_tables(fleet, page_ids, method):
-    """ONE stacked fleet resolve → (3, T, P) int32: per tenant row, the
+    """ONE stacked fleet resolve → (4, T, P) int32: per tenant row, the
     flat block table (-1 holes), the owner field (chain layer for the
-    walk, bfi-sid for direct), and the per-page lookup cost."""
+    walk, bfi-sid for direct), the per-page lookup cost, and the tier
+    residency bit (1 where the hit is host-spilled — its table id is
+    stale and must not reach the attention kernel unpromoted)."""
     res = fleet_lib.get_resolver(method)(fleet, page_ids)
     table = jnp.where(res.found, res.ptr.astype(jnp.int32), -1)
     return jnp.stack([table, res.owner.astype(jnp.int32),
-                      res.lookups.astype(jnp.int32)])
+                      res.lookups.astype(jnp.int32),
+                      res.cold.astype(jnp.int32)])
 
 
 class PagedKVCache:
@@ -128,6 +144,11 @@ class PagedKVCache:
         # descendant's): the fan-out set of a COW-prepare stamp
         self._occupants: dict[int, list[tuple[int, int]]] = {}
         self._grid = None      # cached (T, P) page-id grid for the resolve
+        # host tier: sid -> {block index -> (k, v) numpy (L, bs, H, D)}
+        # for sequences whose exclusive blocks were demoted (demote_seq)
+        self._cold_kv: dict[int, dict[int, tuple]] = {}
+        self.demoted_blocks = 0   # lifetime spills (tier metrics)
+        self.promoted_blocks = 0  # lifetime un-spills
 
     # -- fleet geometry -------------------------------------------------------
 
@@ -160,6 +181,7 @@ class PagedKVCache:
             l2=nf.l2.at[:t0, :c0].set(old.l2),
             length=nf.length.at[:t0].set(old.length),
             scalable=nf.scalable.at[:t0].set(old.scalable),
+            cold_count=nf.cold_count.at[:t0].set(old.cold_count),
         )
         self._free_tenants = (list(range(t1 - 1, t0 - 1, -1))
                               + self._free_tenants)
@@ -182,18 +204,18 @@ class PagedKVCache:
 
     def _resolve_all(self):
         """One stacked fleet resolve of every tenant's full block table;
-        one device→host sync. Returns host (tables, owners, lookups),
-        each (T, P) int32."""
+        one device→host sync. Returns host (tables, owners, lookups,
+        colds), each (T, P) int32."""
         out = np.array(_fleet_tables(self.fleet, self._page_grid(),
                                      self.resolver))
-        return out[0], out[1], out[2]
+        return out[0], out[1], out[2], out[3]
 
     def _resolve_tenant(self, t: int):
         """Stacked fleet resolve restricted to one tenant row (a 1-tenant
         view of the same arrays), so single-sequence ops — ``append``,
         ``prepare_write``, ``block_table``, ``fork`` — don't pay the
         fleet-wide O(T·C·P) resolve. Returns host (table, owner,
-        lookups), each (P,) int32."""
+        lookups, cold), each (P,) int32."""
         fl = self.fleet
         view = dataclasses.replace(
             fl,
@@ -207,10 +229,11 @@ class PagedKVCache:
             scalable=fl.scalable[t:t + 1],
             overflow=fl.overflow[t:t + 1],
             snap_dropped=fl.snap_dropped[t:t + 1],
+            cold_count=fl.cold_count[t:t + 1],
         )
         grid = jnp.arange(self.cfg.max_blocks_per_seq, dtype=jnp.int32)[None]
         out = np.array(_fleet_tables(view, grid, self.resolver))
-        return out[0, 0], out[1, 0], out[2, 0]
+        return out[0, 0], out[1, 0], out[2, 0], out[3, 0]
 
     def _count_lookups(self, seq: _Seq, table_row: np.ndarray,
                        lookups_row: np.ndarray) -> int:
@@ -242,6 +265,10 @@ class PagedKVCache:
 
     def fork(self, sid: int) -> int:
         parent = self._live_seq(sid)
+        # a parked parent promotes first: the fork shares its table by
+        # block id, and a spilled block's id is stale by definition
+        if parent.cold:
+            self.promote_seq(sid)
         child = self._next_sid
         self._next_sid += 1
         mb = self.cfg.max_blocks_per_seq
@@ -270,7 +297,7 @@ class PagedKVCache:
                 self._grow_fleet(
                     max_chain=max(self.fleet.spec.max_chain * 2, depth + 1)
                 )
-            shared, _, lookups_r = self._resolve_tenant(tp)
+            shared, _, lookups_r, _ = self._resolve_tenant(tp)
             self.lookup_count += self._count_lookups(parent, shared,
                                                      lookups_r)
             self.fleet = fleet_lib.fork_tenant(self.fleet, tp, tc)
@@ -313,8 +340,11 @@ class PagedKVCache:
         self.fleet = fleet_lib.free_tenant(self.fleet, t)
         self._free_tenants.append(t)
         # a freed node never writes again, and nothing may keep stamping
-        # into its (soon reused) tenant row
+        # into its (soon reused) tenant row; its host-tier spill (exclusive
+        # by construction) has no other reader and is dropped with it
         self._occupants.pop(sid, None)
+        self._cold_kv.pop(sid, None)
+        seq.cold.clear()
         for anc_sid in seq.path[:-1]:
             occ = self._occupants.get(anc_sid)
             if occ is not None:
@@ -380,9 +410,13 @@ class PagedKVCache:
     # -- fleet-backed table materialization -----------------------------------
 
     def block_table(self, sid: int) -> jax.Array:
-        """Direct block table for the attention kernel (fleet-resolved)."""
+        """Direct block table for the attention kernel (fleet-resolved).
+        Promotes the sequence first if any of its blocks are host-spilled
+        (a stale cold block id must never reach the kernel)."""
         seq = self._live_seq(sid)
-        table_r, _, lookups_r = self._resolve_tenant(seq.tenant)
+        if seq.cold:
+            self.promote_seq(sid)
+        table_r, _, lookups_r, _ = self._resolve_tenant(seq.tenant)
         self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
         return jnp.asarray(table_r, jnp.int32)
 
@@ -438,7 +472,8 @@ class PagedKVCache:
         self._check_pad(len(sids), pad_to, pad_block)
         for sid in sids:
             self._live_seq(sid)          # freed sequences must raise
-        tables, _, lookups = self._resolve_all()
+        self._promote_cold(sids)
+        tables, _, lookups = self._resolve_all()[:3]
         for sid in sids:
             seq = self._seqs[sid]
             self.lookup_count += self._count_lookups(
@@ -629,7 +664,9 @@ class PagedKVCache:
         whole decode batch.
         """
         seq = self._live_seq(sid)
-        table_r, owner_r, lookups_r = self._resolve_tenant(seq.tenant)
+        if seq.cold:
+            self.promote_seq(sid)
+        table_r, owner_r, lookups_r, _ = self._resolve_tenant(seq.tenant)
         self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
         writes = self._prepare_against([sid], table_r[None], owner_r[None],
                                        row_map={seq.tenant: 0})
@@ -652,7 +689,8 @@ class PagedKVCache:
         step commits its token.
         """
         self._check_pad(len(sids), pad_to, pad_block)
-        tables, owners, lookups = self._resolve_all()
+        self._promote_cold(sids)
+        tables, owners, lookups, _ = self._resolve_all()
         for sid in sids:
             seq = self._live_seq(sid)
             self.lookup_count += self._count_lookups(
@@ -702,7 +740,9 @@ class PagedKVCache:
         start, end = seq.length, seq.length + nt
         if (end - 1) // bs >= self.cfg.max_blocks_per_seq:
             raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
-        table_r, owner_r, lookups_r = self._resolve_tenant(seq.tenant)
+        if seq.cold:
+            self.promote_seq(sid)
+        table_r, owner_r, lookups_r, _ = self._resolve_tenant(seq.tenant)
         self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
         tables, owners = table_r[None], owner_r[None]
         row_map = {seq.tenant: 0}
@@ -730,6 +770,159 @@ class PagedKVCache:
         )
         seq.length = end
 
+    # -- tiering: host spill of parked sequences' exclusive blocks -------------
+
+    def _promote_cold(self, sids) -> None:
+        """Lazy promotion hook: un-spill every involved sequence *before*
+        the table-producing fleet resolve (promotion mutates the fleet,
+        so it must not run against an already-synced result)."""
+        for sid in sids:
+            if self._seqs[sid].cold:
+                self.promote_seq(sid)
+
+    def _demotable_blocks(self, seq: _Seq) -> list[int]:
+        """Logical block indexes of ``seq`` that may spill to host.
+
+        A block is demotable only when this sequence is provably its sole
+        reader: the entry sits in the sequence's own layer (``owner`` is
+        self), the pool block is refcounted exactly once *by this
+        sequence*, no other tenant stack holds a copy of any of this
+        node's layers (vanilla post-fork writes are stamped into
+        descendants' stacks without a refcount, so the refcount alone
+        cannot prove exclusivity), and it is not the active tail block
+        still receiving tokens — the COW-layer analogue of the fleet
+        rule that only immutable snapshot layers demote.
+        """
+        if any(t != seq.tenant for t, _ in self._occupants[seq.sid]):
+            return []
+        active = seq.length // self.cfg.block_size
+        out = []
+        for blk in range(self.cfg.max_blocks_per_seq):
+            b = int(seq.table[blk])
+            if (b >= 0 and blk != active and blk not in seq.cold
+                    and seq.owner[blk] in (-1, seq.sid)
+                    and b in seq.refs and int(self._ref[b]) == 1):
+                out.append(blk)
+        return out
+
+    def _stamp_cold(self, seq: _Seq, blks: list[int]) -> None:
+        """Mark ``seq``'s entries for ``blks`` host-resident: rewrite each
+        with ``FLAG_COLD`` set, keeping the (now stale) block id in the
+        ptr field as a breadcrumb. ``_demotable_blocks`` guarantees every
+        copy of the layer lives in the sequence's own tenant stack."""
+        if self.scalable:
+            w1 = fmt.FLAG_BFI_VALID | (seq.sid & fmt.BFI_MASK)
+        else:
+            w1 = 0
+        ts, ls, ps, w0s = [], [], [], []
+        for t, layer in self._occupants[seq.sid]:
+            for blk in blks:
+                ts.append(t)
+                ls.append(layer)
+                ps.append(blk)
+                w0s.append(fmt.FLAG_ALLOCATED | fmt.FLAG_COLD
+                           | int(seq.table[blk]))
+        k = 1
+        while k < len(ts):
+            k *= 2
+        pad = k - len(ts)
+        t_arr = np.asarray(ts + [self.fleet.spec.n_tenants] * pad, np.int32)
+        l_arr = np.asarray(ls + [0] * pad, np.int32)
+        p_arr = np.asarray(ps + [0] * pad, np.int32)
+        ent = np.stack([np.asarray(w0s + [0] * pad, np.uint32),
+                        np.asarray([w1] * len(ts) + [0] * pad, np.uint32)],
+                       axis=-1)
+        self.fleet = fleet_lib.stamp_entries(self.fleet, t_arr, l_arr,
+                                             p_arr, ent)
+
+    def demote_seq(self, sid: int, *, max_blocks: int | None = None,
+                   verify: bool = True) -> int:
+        """Spill a parked sequence's exclusively-owned blocks to host.
+
+        Moves the K/V data of every demotable block (``_demotable_blocks``)
+        out of ``pool_k``/``pool_v`` in one batched device→host transfer,
+        returns the pool blocks to the free list, and stamps the owning
+        fleet entries with ``FLAG_COLD`` so the stacked resolve reports
+        the positions host-resident. ``verify`` re-reads the device copy
+        before the blocks are released and requires it bit-identical to
+        the staged host bytes. The sequence stays live throughout: any
+        later table-producing call promotes it transparently. Returns
+        the number of blocks spilled.
+        """
+        seq = self._live_seq(sid)
+        blks = self._demotable_blocks(seq)
+        if max_blocks is not None:
+            blks = blks[:max_blocks]
+        if not blks:
+            return 0
+        bids = [int(seq.table[blk]) for blk in blks]
+        sel = jnp.asarray(bids, jnp.int32)
+        ks = np.asarray(self.pool_k[:, sel])
+        vs = np.asarray(self.pool_v[:, sel])
+        if verify:
+            k2 = np.asarray(self.pool_k[:, sel])
+            v2 = np.asarray(self.pool_v[:, sel])
+            if (ks.view(np.uint8) != k2.view(np.uint8)).any() or (
+                    vs.view(np.uint8) != v2.view(np.uint8)).any():
+                raise RuntimeError(
+                    f"demote_seq({sid}): device read not stable")
+        host = self._cold_kv.setdefault(sid, {})
+        for i, blk in enumerate(blks):
+            host[blk] = (ks[:, i], vs[:, i])
+            seq.cold.add(blk)
+        self._stamp_cold(seq, blks)
+        for b in bids:
+            seq.refs.discard(b)
+            self._ref[b] = 0
+            self._free.append(b)
+        self.demoted_blocks += len(blks)
+        return len(blks)
+
+    def promote_seq(self, sid: int) -> int:
+        """Un-spill every host-resident block of a sequence.
+
+        Allocates fresh pool blocks, restores the K/V data in one batched
+        host→device scatter, bit-verifies the landed bytes against the
+        host copy, and stamps the entries hot again through the normal
+        write protocol (which clears ``FLAG_COLD``). This is what a
+        resumed deep fork pays, lazily, on the first decode step it
+        actually joins. Returns the number of blocks promoted.
+        """
+        seq = self._live_seq(sid)
+        if not seq.cold:
+            return 0
+        blks = sorted(seq.cold)
+        host = self._cold_kv[sid]
+        nbs = [self._alloc(seq) for _ in blks]
+        sel = jnp.asarray(nbs, jnp.int32)
+        ks = np.stack([host[blk][0] for blk in blks], axis=1)
+        vs = np.stack([host[blk][1] for blk in blks], axis=1)
+        self.pool_k = self.pool_k.at[:, sel].set(
+            jnp.asarray(ks, self.cfg.dtype))
+        self.pool_v = self.pool_v.at[:, sel].set(
+            jnp.asarray(vs, self.cfg.dtype))
+        back_k = np.asarray(self.pool_k[:, sel])
+        back_v = np.asarray(self.pool_v[:, sel])
+        if (ks.view(np.uint8) != back_k.view(np.uint8)).any() or (
+                vs.view(np.uint8) != back_v.view(np.uint8)).any():
+            raise RuntimeError(
+                f"promote_seq({sid}): host→device transfer corrupted data")
+        writes = []
+        for blk, nb in zip(blks, nbs):
+            seq.table[blk] = nb
+            host.pop(blk)
+            writes.append((seq.sid, blk, nb))
+        seq.cold.clear()
+        if not host:
+            self._cold_kv.pop(sid, None)
+        self._stamp_fleet(writes)
+        self.promoted_blocks += len(blks)
+        return len(blks)
+
+    def host_blocks_in_use(self) -> int:
+        """Blocks currently resident in the host tier (spilled K/V)."""
+        return sum(len(d) for d in self._cold_kv.values())
+
     # -- reads (reference path; kernels/paged_attention is the fast path) ------
 
     def gather(self, sid: int):
@@ -739,9 +932,16 @@ class PagedKVCache:
         bs = self.cfg.block_size
         n_blk = -(-seq.length // bs) if seq.length else 0
         ks, vs = [], []
+        cold = self._cold_kv.get(sid, {})
         for b in range(n_blk):
-            ks.append(self.pool_k[:, table[b]])
-            vs.append(self.pool_v[:, table[b]])
+            if b in seq.cold:
+                # spilled blocks read straight from the host tier — the
+                # oracle must not perturb residency by promoting
+                ks.append(jnp.asarray(cold[b][0], self.cfg.dtype))
+                vs.append(jnp.asarray(cold[b][1], self.cfg.dtype))
+            else:
+                ks.append(self.pool_k[:, table[b]])
+                vs.append(self.pool_v[:, table[b]])
         if not ks:
             L, H, D = self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.head_dim
             return (jnp.zeros((L, 0, H, D), self.cfg.dtype),) * 2

@@ -21,6 +21,14 @@ The engine can also drive a fleet maintenance plane: pass a
 ``core.scheduler.MaintenanceScheduler`` and each decode step ends with one
 budgeted maintenance tick — background streaming/GC running *beside* the
 serving path instead of stopping the world (paper §6.4).
+
+Tiering: ``park_request`` pulls a sequence out of the decode batch and
+spills its exclusively-owned KV blocks to host memory
+(``PagedKVCache.demote_seq``), freeing device pool blocks for admissions;
+``resume_request`` just re-activates it — promotion is *lazy*, paid by
+the first ``step()`` whose batch includes the sequence (the decode path's
+``prepare_step`` promotes before resolving tables). See
+``docs/memory.md`` for the full residency lifecycle.
 """
 
 from __future__ import annotations
@@ -58,6 +66,7 @@ class Engine:
             resolver=resolver,
         )
         self.active: dict[int, list[int]] = {}  # sid -> generated tokens
+        self.parked: dict[int, list[int]] = {}  # sid -> tokens, off-batch
         # Scratch block absorbing the in-step pool writes of padded batch
         # rows, so a padded decode can never touch a live sequence's blocks.
         self._pad_block = self.kv.reserve_block()
@@ -78,18 +87,41 @@ class Engine:
         return sid
 
     def fork_request(self, sid: int) -> int:
-        child = self.kv.fork(sid)
-        self.active[child] = list(self.active.get(sid, []))
+        child = self.kv.fork(sid)   # promotes a parked parent first
+        tokens = self.active.get(sid) or self.parked.get(sid) or []
+        self.active[child] = list(tokens)
         return child
 
     def finish_request(self, sid: int) -> None:
         """Retire a finished sequence and release its blocks to the pool.
 
         Safe with live forks: the cache tombstones the parent until the
-        last descendant is freed (``PagedKVCache.free_seq``).
+        last descendant is freed (``PagedKVCache.free_seq``). Parked
+        sequences may finish too — their host-tier spill is dropped with
+        them, never promoted.
         """
-        del self.active[sid]
+        if sid in self.active:
+            del self.active[sid]
+        else:
+            del self.parked[sid]
         self.kv.free_seq(sid)
+
+    def park_request(self, sid: int) -> int:
+        """Suspend a sequence: drop it from the decode batch and spill its
+        exclusively-owned KV blocks to the host tier, freeing device pool
+        blocks for other admissions. Shared blocks (live forks, common
+        prefixes) stay hot and stay shared. Returns the number of blocks
+        spilled (0 is fine — parking is always legal, spilling is
+        best-effort)."""
+        self.parked[sid] = self.active.pop(sid)
+        return self.kv.demote_seq(sid)
+
+    def resume_request(self, sid: int) -> None:
+        """Re-activate a parked sequence. Promotion is deliberately NOT
+        done here: the first ``step()`` including the sequence promotes
+        it inside ``prepare_step``, so a resume costs nothing until the
+        sequence actually decodes."""
+        self.active[sid] = self.parked.pop(sid)
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -142,8 +174,10 @@ class Engine:
     def memory_stats(self) -> dict:
         stats = dict(
             blocks_in_use=self.kv.blocks_in_use(),
+            host_blocks=self.kv.host_blocks_in_use(),
             lookups=self.kv.lookup_count,
             n_seqs=len(self.active),
+            n_parked=len(self.parked),
         )
         if self.scheduler is not None:
             stats["maintenance"] = self.scheduler.stats()

@@ -8,6 +8,12 @@ direct-access principle. Per-sequence positions come from ``lengths``
 
 The attention inner loop is ``kernels/paged_attention`` (Pallas on TPU,
 oracle on CPU). Pool writes happen in-step at (table[len // bs], len % bs).
+
+Block tables must be fully **device-resident**: every id in ``tables``
+must address live pool data. Host-tier promotion of spilled (cold)
+blocks happens strictly before this step, inside
+``PagedKVCache.prepare_step`` — by the time a table reaches this jitted
+function there are no cold positions left (see ``docs/memory.md``).
 """
 
 from __future__ import annotations

@@ -108,8 +108,10 @@ def check_lease_invariants(fl):
         assert alloc[t] <= count[t] * q
         held_all.extend(held.tolist())
         entries = fl.l2[t, :int(lengths[t])]
+        # COLD entries' ptrs address the host tier, not leased device rows
         live = (np.asarray(fmt.entry_allocated(entries))
-                & ~np.asarray(fmt.entry_zero(entries)))
+                & ~np.asarray(fmt.entry_zero(entries))
+                & ~np.asarray(fmt.entry_cold(entries)))
         rows = np.asarray(fmt.entry_ptr(entries))[live]
         if rows.size:
             assert (owner[rows // q] == t).all(), \

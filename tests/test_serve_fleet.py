@@ -29,7 +29,7 @@ def prompt(n: int, base: float = 1.0):
 def assert_parity(cache: PagedKVCache, sids) -> None:
     """Fleet-resolved tables/owners ≡ numpy oracle, plus the refcount
     invariant behind ``blocks_in_use``."""
-    tables, owners, _ = cache._resolve_all()
+    tables, owners, _, _ = cache._resolve_all()
     n_tbl, _ = cache.batched_tables(sids)
     n_tbl = np.asarray(n_tbl)
     for i, sid in enumerate(sids):
@@ -146,7 +146,7 @@ def test_resolver_methods_bit_identical(scalable, methods):
     rows = {}
     for m in methods:
         cache.resolver = m
-        tables, _, _ = cache._resolve_all()
+        tables, _, _, _ = cache._resolve_all()
         rows[m] = tables
     ref = rows[methods[0]]
     for m in methods[1:]:

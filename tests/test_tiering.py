@@ -1,0 +1,408 @@
+"""Tiered page pool: HBM <-> host spill for cold snapshot layers.
+
+Contracts under test:
+
+* ``fleet.demote_tenants`` -> ``fleet.promote_tenants`` round-trips
+  bit-identically, including through COW writes to a descendant layer
+  while an ancestor layer is cold (property-tested);
+* the ``MaintenanceScheduler`` demotion policy never touches a tenant's
+  active layer and never violates lease non-aliasing, no matter how its
+  budgeted ticks interleave with serving writes;
+* ``free_tenant``/``compact`` leave no orphaned host pages: a freed cold
+  tenant returns its host rows to the ``TieredStore`` free list;
+* the KV-cache/serving analogue (``PagedKVCache.demote_seq`` /
+  ``promote_seq``) spills only provably-exclusive blocks and promotes
+  lazily from every table-producing path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet, format as fmt, metrics
+from repro.core.scheduler import MaintenanceScheduler
+from repro.core.store import TieredStore
+from tests.test_maintenance import check_lease_invariants
+
+N_PAGES, PAGE = 32, 4
+
+
+def make_fleet(n_tenants=3, *, scalable=True, max_chain=8,
+               lease_quantum=8, pool_capacity=1024):
+    spec = fleet.FleetSpec(
+        n_tenants=n_tenants, n_pages=N_PAGES, page_size=PAGE,
+        max_chain=max_chain, pool_capacity=pool_capacity,
+        lease_quantum=lease_quantum, l2_per_table=N_PAGES,
+    )
+    return fleet.create(spec, scalable=jnp.asarray(scalable, bool))
+
+
+def grow(fl, layers, *, writes=6, seed=0):
+    rng = np.random.default_rng(seed)
+    t = fl.spec.n_tenants
+    for layer in range(layers):
+        ids = np.stack([rng.choice(N_PAGES, writes, replace=False)
+                        for _ in range(t)]).astype(np.int32)
+        data = rng.standard_normal((t, writes, PAGE)).astype(np.float32)
+        fl = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data))
+        if layer < layers - 1:
+            fl = fleet.snapshot(fl)
+    return fl
+
+
+def full_grid(fl):
+    return jnp.broadcast_to(jnp.arange(N_PAGES, dtype=jnp.int32)[None],
+                            (fl.spec.n_tenants, N_PAGES))
+
+
+def snapshot_reads(fl, store=None):
+    """(data, found&~zero) for the whole fleet, through the host tier."""
+    if store is None:
+        data, res = fleet.read(fl, full_grid(fl))
+    else:
+        data, res = fleet.read_tiered(fl, store, full_grid(fl))
+    ok = np.asarray(res.found) & ~np.asarray(res.zero)
+    return np.asarray(data), ok
+
+
+def active_layer_never_cold(fl):
+    """No entry *owned* by a tenant's active layer carries FLAG_COLD.
+
+    Ownership is first-reference from the top: an active-layer entry
+    whose row is also referenced below is an inherited copy-forward
+    (allowed to be cold); a row owned by the active layer itself is the
+    mutable working set and must stay hot.
+    """
+    l2 = np.asarray(fl.l2)
+    for t in range(fl.spec.n_tenants):
+        length = int(np.asarray(fl.length)[t])
+        w0 = l2[t, :length, ..., 0]
+        alloc = (w0 & np.uint32(fmt.FLAG_ALLOCATED)) != 0
+        cold = (w0 & np.uint32(fmt.FLAG_COLD)) != 0
+        rows = (w0 & np.uint32(fmt.PTR_MASK)).astype(np.int64)
+        act = length - 1
+        for p in np.flatnonzero(alloc[act] & cold[act]):
+            below = alloc[:act, p] & (rows[:act, p] == rows[act, p])
+            assert below.any(), \
+                f"tenant {t}: active layer owns a cold row at page {p}"
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_demote_promote_roundtrip_bit_identical(scalable):
+    fl = grow(make_fleet(scalable=scalable), layers=5, seed=1)
+    store = TieredStore.for_fleet(fl.spec)
+    before, okb = snapshot_reads(fl)
+
+    fl, rep = fleet.demote_tenants(fl, store, [0, 2])
+    assert rep["rows_demoted"] > 0 and sorted(rep["tenants"]) == [0, 2]
+    check_lease_invariants(fl)
+    active_layer_never_cold(fl)
+    assert store.host_rows_in_use() == rep["rows_demoted"]
+    st = fleet.fleet_stats(fl)
+    assert st["cold_tenants"] == 2 and st["rows_cold"] == rep["rows_demoted"]
+
+    # the device-only read masks cold pages; the tiered read serves them
+    dev, _ = snapshot_reads(fl)
+    cold = np.asarray(fleet.get_resolver("auto")(fl, full_grid(fl)).cold)
+    assert cold[[0, 2]].any() and not cold[1].any()
+    assert (dev[cold] == 0).all()
+    tiered, okt = snapshot_reads(fl, store)
+    np.testing.assert_array_equal(okt, okb)
+    assert np.array_equal(tiered.view(np.uint8), before.view(np.uint8))
+
+    fl, prep = fleet.promote_tenants(fl, store, [0, 2])
+    assert prep["rows_promoted"] == rep["rows_demoted"]
+    assert store.host_rows_in_use() == 0
+    check_lease_invariants(fl)
+    after, oka = snapshot_reads(fl)
+    np.testing.assert_array_equal(oka, okb)
+    assert np.array_equal(after.view(np.uint8), before.view(np.uint8))
+    resid = metrics.tier_residency(fl, store)
+    assert resid.host_rows == 0 and resid.cold_tenants == 0
+    assert resid.demoted_rows == resid.promoted_rows > 0
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_cow_write_while_ancestor_cold(scalable):
+    """COW writes land in the active layer while ancestor layers sit in
+    the host tier; promotion afterwards restores a bit-exact view of the
+    unwritten pages and keeps the new writes."""
+    fl = grow(make_fleet(n_tenants=2, scalable=scalable), layers=4, seed=3)
+    store = TieredStore.for_fleet(fl.spec)
+    before, _ = snapshot_reads(fl)
+
+    fl, rep = fleet.demote_tenants(fl, store, True)
+    assert rep["rows_demoted"] > 0
+    fl = fleet.snapshot(fl)          # fork a fresh descendant COW layer
+    ids = np.asarray([[0, 1], [2, 3]], np.int32)
+    data = np.full((2, 2, PAGE), 7.5, np.float32)
+    fl = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data))
+    check_lease_invariants(fl)
+    active_layer_never_cold(fl)
+
+    fl, _ = fleet.promote_tenants(fl, store, True)
+    assert store.host_rows_in_use() == 0
+    after, ok = snapshot_reads(fl)
+    expect = before.copy()
+    for t in range(2):
+        expect[t, ids[t]] = data[t]
+    assert np.array_equal(after.view(np.uint8), expect.view(np.uint8))
+    # the COW write itself must not have been spilled or masked
+    assert ok[0, 0] and ok[1, 2]
+
+
+def test_demote_roundtrip_property():
+    """Hypothesis: arbitrary write/snapshot/demote/promote interleavings
+    keep the tiered fleet bit-identical to an untiered twin."""
+    pytest.importorskip("hypothesis",
+                        reason="install extras: pip install -e .[test]")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.one_of(
+        st.tuples(st.just("write"),
+                  st.lists(st.integers(0, N_PAGES - 1), min_size=1,
+                           max_size=4, unique=True),
+                  st.integers(0, 2**31 - 1)),
+        st.tuples(st.just("snapshot"), st.just(None), st.just(None)),
+        st.tuples(st.just("demote"), st.integers(0, 2), st.integers(1, 16)),
+        st.tuples(st.just("promote"), st.integers(0, 2), st.just(None)),
+    )
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.lists(op, min_size=1, max_size=12), st.booleans())
+    def run(ops, scalable):
+        tiered = make_fleet(scalable=scalable, max_chain=16)
+        plain = make_fleet(scalable=scalable, max_chain=16)
+        store = TieredStore.for_fleet(tiered.spec)
+        for kind, a, b in ops:
+            if kind == "write":
+                ids = np.broadcast_to(np.asarray(a, np.int32), (3, len(a)))
+                rng = np.random.default_rng(b)
+                data = rng.standard_normal((3, len(a), PAGE)) \
+                    .astype(np.float32)
+                tiered = fleet.write(tiered, jnp.asarray(ids),
+                                     jnp.asarray(data))
+                plain = fleet.write(plain, jnp.asarray(ids),
+                                    jnp.asarray(data))
+            elif kind == "snapshot":
+                tiered = fleet.snapshot(tiered)
+                plain = fleet.snapshot(plain)
+            elif kind == "demote":
+                tiered, _ = fleet.demote_tenants(tiered, store, [a],
+                                                 max_rows=b)
+            else:
+                tiered, _ = fleet.promote_tenants(tiered, store, [a])
+            check_lease_invariants(tiered)
+            active_layer_never_cold(tiered)
+        want, okw = snapshot_reads(plain)
+        got, okg = snapshot_reads(tiered, store)
+        np.testing.assert_array_equal(okg, okw)
+        assert np.array_equal(got.view(np.uint8), want.view(np.uint8))
+        # full promotion converges back to an all-device fleet
+        tiered, _ = fleet.promote_tenants(tiered, store, True)
+        assert store.host_rows_in_use() == 0
+        got2, _ = snapshot_reads(tiered)
+        assert np.array_equal(got2.view(np.uint8), want.view(np.uint8))
+
+    run()
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_scheduler_demotion_interleaved_with_serving(scalable):
+    """Budgeted demotion ticks interleaved with serving writes: the
+    active layer is never spilled, leases never alias, the per-tick row
+    cap holds, and the fleet converges to the device budget."""
+    fl = make_fleet(n_tenants=4, scalable=scalable, max_chain=12,
+                    pool_capacity=2048)
+    store = TieredStore.for_fleet(fl.spec)
+    sched = MaintenanceScheduler(
+        fl, stream_chain_threshold=10**6,   # isolate the demotion policy
+        store=store, device_page_budget=40, demote_rows_per_tick=7,
+    )
+    rng = np.random.default_rng(7)
+    shadow, ok0 = None, None
+    for step in range(30):
+        ids = np.stack([rng.choice(N_PAGES, 4, replace=False)
+                        for _ in range(4)]).astype(np.int32)
+        data = rng.standard_normal((4, 4, PAGE)).astype(np.float32)
+        sched.fleet = fleet.write(sched.fleet, jnp.asarray(ids),
+                                  jnp.asarray(data))
+        if step % 3 == 2 and step < 27:
+            sched.fleet = fleet.snapshot(sched.fleet)
+        rep = sched.tick()
+        assert rep["rows_demoted"] <= 7
+        check_lease_invariants(sched.fleet)
+        active_layer_never_cold(sched.fleet)
+    shadow, ok0 = snapshot_reads(sched.fleet, store)
+    # drain: converge to the budget, then verify nothing was lost
+    for _ in range(200):
+        if sched._over_budget(fleet.tenant_stats(sched.fleet)) == 0:
+            break
+        if not sched.tick()["rows_demoted"]:
+            break
+    # converged: at budget, or every remaining row is an undemotable
+    # active layer (the lease-quantum floor the policy must respect)
+    st = fleet.tenant_stats(sched.fleet)
+    assert (sched._over_budget(st) == 0
+            or not sched._demote_candidates(st))
+    assert int(np.sum(st["alloc_count"])) <= 40 + 4 * fl.spec.lease_quantum
+    assert sched.rows_demoted == store.demoted_rows > 0
+    got, ok1 = snapshot_reads(sched.fleet, store)
+    np.testing.assert_array_equal(ok1, ok0)
+    assert np.array_equal(got.view(np.uint8), shadow.view(np.uint8))
+    assert sched.stats()["rows_demoted"] == sched.rows_demoted
+    assert sched.stats()["host_rows_in_use"] == store.host_rows_in_use()
+
+
+def test_free_tenant_returns_cold_rows():
+    """Freeing a tenant with demoted pages must return its host rows to
+    the TieredStore free list and clear its residency counters — no
+    orphaned host pages (regression: free once only swept device rows)."""
+    fl = grow(make_fleet(), layers=4, seed=5)
+    store = TieredStore.for_fleet(fl.spec)
+    fl, rep = fleet.demote_tenants(fl, store, [0, 1])
+    held = store.host_rows_in_use()
+    assert held == rep["rows_demoted"] > 0
+
+    with pytest.raises(ValueError, match="host-tier rows"):
+        fleet.free_tenant(fl, [0])       # cold tenant needs the store
+
+    fl = fleet.free_tenant(fl, [0], store=store)
+    assert int(np.asarray(fl.cold_count)[0]) == 0
+    assert store.host_rows_in_use() < held
+    check_lease_invariants(fl)
+    fl = fleet.free_tenant(fl, [1], store=store)
+    assert store.host_rows_in_use() == 0
+    assert fleet.fleet_stats(fl)["cold_tenants"] == 0
+    # freed host rows are recycled, not leaked: demoting again reuses them
+    fl = grow(fl, layers=3, seed=6)
+    fl, rep2 = fleet.demote_tenants(fl, store, True)
+    assert store.host_rows_in_use() == rep2["rows_demoted"]
+    assert store.stats()["host_rows_capacity"] >= store.host_rows_in_use()
+
+
+def test_compact_preserves_cold_entries():
+    """A pool repack moves device rows only: cold entries keep their host
+    row ptrs, and the tiered read is unchanged."""
+    fl = grow(make_fleet(), layers=4, seed=8)
+    store = TieredStore.for_fleet(fl.spec)
+    fl, _ = fleet.demote_tenants(fl, store, [1])
+    before, ok0 = snapshot_reads(fl, store)
+    fl = fleet.compact(fl)
+    check_lease_invariants(fl)
+    after, ok1 = snapshot_reads(fl, store)
+    np.testing.assert_array_equal(ok1, ok0)
+    assert np.array_equal(after.view(np.uint8), before.view(np.uint8))
+    assert store.host_rows_in_use() > 0   # compact must not drop the tier
+
+
+def test_clone_refuses_cold_source():
+    fl = grow(make_fleet(), layers=3, seed=9)
+    store = TieredStore.for_fleet(fl.spec)
+    fl, _ = fleet.demote_tenants(fl, store, [0])
+    with pytest.raises(ValueError, match="cold"):
+        fleet.clone_tenant(fl, 0, 2)
+
+
+def test_tiered_pool_bytes_model():
+    spec = make_fleet().spec
+    all_hbm = metrics.tiered_pool_bytes(spec, 500, 8, tiered=False)
+    tiered = metrics.tiered_pool_bytes(spec, 500, 8, tiered=True)
+    assert all_hbm == 500 * tiered
+    assert tiered == 8 * PAGE * 4
+
+
+# -- serving plane: PagedKVCache spill ---------------------------------------
+
+
+def _kv_cfg():
+    from repro.kvcache.paged import PagedKVConfig
+
+    return PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=4, block_size=4,
+                         n_blocks=64, max_blocks_per_seq=8,
+                         dtype=jnp.float32)
+
+
+def _tok(i, t):
+    k = jnp.full((2, 2, 4), i * 100 + t, jnp.float32)
+    return k, -k
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_kv_demote_promote_roundtrip(scalable):
+    from repro.kvcache.paged import PagedKVCache
+
+    kv = PagedKVCache(_kv_cfg(), scalable=scalable)
+    a = kv.new_seq()
+    for t in range(10):
+        kv.append(a, *_tok(1, t))
+    ka, va = np.asarray(kv.gather(a)[0]), np.asarray(kv.gather(a)[1])
+    used = kv.blocks_in_use()
+
+    n = kv.demote_seq(a)
+    assert n == 2                      # two frozen blocks; the tail stays
+    assert kv.blocks_in_use() == used - n
+    assert kv.host_blocks_in_use() == n
+    # gather reads through the host tier without promoting
+    k2, v2 = kv.gather(a)
+    assert np.array_equal(np.asarray(k2), ka)
+    assert np.array_equal(np.asarray(v2), va)
+    assert kv.host_blocks_in_use() == n
+
+    # any table-producing path promotes lazily and restores bit-identity
+    kv.block_table(a)
+    assert kv.host_blocks_in_use() == 0 and not kv._seqs[a].cold
+    k3, v3 = kv.gather(a)
+    assert np.array_equal(np.asarray(k3), ka)
+    assert np.array_equal(np.asarray(v3), va)
+    assert kv.promoted_blocks == kv.demoted_blocks == n
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_kv_shared_blocks_never_spill(scalable):
+    """Blocks visible to a fork (refcounted or via vanilla layer copies)
+    are not exclusive and must not demote; freeing the fork unlocks
+    them."""
+    from repro.kvcache.paged import PagedKVCache
+
+    kv = PagedKVCache(_kv_cfg(), scalable=scalable)
+    a = kv.new_seq()
+    for t in range(10):
+        kv.append(a, *_tok(1, t))
+    c = kv.fork(a)
+    assert kv.demote_seq(a) == 0       # everything shared with the fork
+    for t in range(6):
+        kv.append(c, *_tok(2, t))      # COW: c now owns exclusive blocks
+    assert kv.demote_seq(c) >= 1
+    kc = np.asarray(kv.gather(c)[0])
+    kv.free_seq(c)                     # drops c's host spill with it
+    assert kv.host_blocks_in_use() == 0
+    assert kv.demote_seq(a) == 2       # fork gone -> a's blocks exclusive
+    ka = np.asarray(kv.gather(a)[0])
+    d = kv.fork(a)                     # fork auto-promotes the parent
+    assert not kv._seqs[a].cold and kv.host_blocks_in_use() == 0
+    assert np.array_equal(np.asarray(kv.gather(d)[0]), ka)
+    del kc
+
+
+def test_kv_parked_seq_survives_batch_decodes():
+    from repro.kvcache.paged import PagedKVCache
+
+    kv = PagedKVCache(_kv_cfg(), scalable=True)
+    a, b = kv.new_seq(), kv.new_seq()
+    for t in range(9):
+        kv.append(a, *_tok(1, t))
+        kv.append(b, *_tok(2, t))
+    ka = np.asarray(kv.gather(a)[0])
+    n = kv.demote_seq(a)
+    assert n == 2
+    pad = kv.reserve_block()
+    for _ in range(3):                 # a parked, b decoding
+        kv.prepare_step([b], pad_to=2, pad_block=pad)
+        kv.advance(b)
+    assert kv._seqs[a].cold and kv.host_blocks_in_use() == n
+    kv.prepare_step([a, b], pad_to=2, pad_block=pad)   # a resumes
+    kv.advance(a)
+    kv.advance(b)
+    assert kv.host_blocks_in_use() == 0
+    assert np.array_equal(np.asarray(kv.gather(a)[0])[:, :9], ka)
