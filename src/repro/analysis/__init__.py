@@ -1,0 +1,23 @@
+"""fleetlint: AST-level invariant checks for the fleet's contracts.
+
+The rules encode the invariants that keep the reproduction honest
+(see ``docs/invariants.md``):
+
+* **FL001** — bit-format literals belong in ``core/format.py`` only;
+* **FL002** — the decode hot path (``Engine.step`` /
+  ``PagedKVCache.prepare_step`` and everything reachable from them)
+  performs no device->host sync beyond the designed boundaries;
+* **FL003** — jitted / Pallas-wrapped functions carry no retrace
+  hazards (mutable closures, shape-branching on traced args);
+* **FL004** — pool / free-list / L2 state is written only by its
+  owners (``ChainFleet``, ``Chain``, ``TieredStore``, ``PagedKVCache``);
+* **FL005** — Pallas kernel bodies and ``index_map`` s are pure.
+
+Everything here is stdlib-only (``ast`` + ``pathlib``): the linter must
+run in CI's lint job, where jax is not installed.
+"""
+
+from repro.analysis.lintcore import Finding, LintConfig, render, run_lint
+from repro.analysis.rules import RULES
+
+__all__ = ["Finding", "LintConfig", "RULES", "render", "run_lint"]

@@ -1,0 +1,206 @@
+"""Package-wide AST index: functions, call edges, jit/kernel detection.
+
+The index is deliberately conservative: calls are resolved by *name*
+(a call to ``x.foo()`` matches every function/method named ``foo`` in
+the scanned tree), which over-approximates reachability — the right
+bias for a linter guarding a hot path.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+FuncNode = ast.FunctionDef | ast.AsyncFunctionDef
+
+_MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "deque", "Counter", "OrderedDict"}
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    d = dotted(dec)
+    if d is not None and (d == "jit" or d.endswith(".jit")):
+        return True
+    if isinstance(dec, ast.Call):
+        f = dotted(dec.func)
+        if f in ("partial", "functools.partial") and dec.args:
+            a = dotted(dec.args[0])
+            return a is not None and (a == "jit" or a.endswith(".jit"))
+        if f is not None and (f == "jit" or f.endswith(".jit")):
+            return True  # @jax.jit(static_argnums=...) factory form
+    return False
+
+
+def param_names(node: FuncNode) -> set[str]:
+    a = node.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+@dataclass
+class FunctionInfo:
+    name: str                 # bare name
+    qualname: str             # Class.name for methods, name otherwise
+    node: FuncNode
+    module: ModuleInfo
+    is_jitted: bool = False   # @jax.jit / @partial(jax.jit, ...) / f = jit(f)
+    is_kernel: bool = False   # appears as the kernel arg of a pl.pallas_call
+    callees: set[str] = field(default_factory=set)  # bare names called
+
+
+@dataclass
+class ModuleInfo:
+    path: Path
+    relpath: str              # posix, relative to the scan root
+    tree: ast.Module
+    lines: list[str]
+    functions: list[FunctionInfo] = field(default_factory=list)
+    # module-level names bound to plain literals (usable in index_maps)
+    constants: set[str] = field(default_factory=set)
+    # module-level names bound to mutable containers (retrace hazards)
+    mutable_globals: dict[str, int] = field(default_factory=dict)
+
+
+class PackageIndex:
+    """Parse every ``*.py`` under *root* and index functions and calls."""
+
+    def __init__(self, root: Path):
+        self.root = root
+        self.modules: list[ModuleInfo] = []
+        self.by_name: dict[str, list[FunctionInfo]] = {}
+        self.by_qualname: dict[str, list[FunctionInfo]] = {}
+        self.errors: list[tuple[str, str]] = []  # (relpath, message)
+        for path in sorted(root.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            try:
+                src = path.read_text()
+                tree = ast.parse(src, filename=str(path))
+            except (SyntaxError, UnicodeDecodeError) as e:
+                self.errors.append((rel, str(e)))
+                continue
+            mod = ModuleInfo(path=path, relpath=rel, tree=tree,
+                             lines=src.splitlines())
+            self._index_module(mod)
+            self.modules.append(mod)
+        for mod in self.modules:
+            for fn in mod.functions:
+                self.by_name.setdefault(fn.name, []).append(fn)
+                self.by_qualname.setdefault(fn.qualname, []).append(fn)
+        self.jitted_names = {f.name for fs in self.by_name.values()
+                             for f in fs if f.is_jitted}
+
+    # -- module indexing ------------------------------------------------
+
+    def _index_module(self, mod: ModuleInfo) -> None:
+        jit_assigned: set[str] = set()   # f = jax.jit(f) at module level
+        kernel_names: set[str] = set()   # first arg of pl.pallas_call
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                f = dotted(node.func)
+                if f is not None and f.split(".")[-1] == "pallas_call":
+                    k = self._kernel_arg(node)
+                    if k:
+                        kernel_names.add(k)
+
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+                f = dotted(stmt.value.func)
+                if f is not None and (f == "jit" or f.endswith(".jit")):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            jit_assigned.add(t.id)
+                    if stmt.value.args:
+                        a = dotted(stmt.value.args[0])
+                        if a:
+                            jit_assigned.add(a)
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if not isinstance(t, ast.Name):
+                        continue
+                    if isinstance(stmt.value, ast.Constant):
+                        mod.constants.add(t.id)
+                    elif self._is_mutable_ctor(stmt.value):
+                        mod.mutable_globals[t.id] = stmt.lineno
+
+        def visit(body, prefix: str) -> None:
+            for stmt in body:
+                if isinstance(stmt, FuncNode):
+                    qual = f"{prefix}{stmt.name}" if prefix else stmt.name
+                    fn = FunctionInfo(
+                        name=stmt.name, qualname=qual, node=stmt, module=mod,
+                        is_jitted=(any(_is_jit_decorator(d)
+                                       for d in stmt.decorator_list)
+                                   or stmt.name in jit_assigned),
+                        is_kernel=stmt.name in kernel_names,
+                    )
+                    fn.callees = self._callees(stmt)
+                    mod.functions.append(fn)
+                    visit(stmt.body, prefix)  # nested defs keep outer prefix
+                elif isinstance(stmt, ast.ClassDef):
+                    visit(stmt.body, f"{stmt.name}.")
+
+        visit(mod.tree.body, "")
+
+    @staticmethod
+    def _is_mutable_ctor(value: ast.expr) -> bool:
+        if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(value, ast.Call):
+            f = dotted(value.func)
+            return f is not None and f.split(".")[-1] in _MUTABLE_CTORS
+        return False
+
+    @staticmethod
+    def _kernel_arg(call: ast.Call) -> str | None:
+        """The kernel function name passed to a ``pallas_call``."""
+        args = list(call.args)
+        for kw in call.keywords:
+            if kw.arg == "kernel":
+                args.insert(0, kw.value)
+        if not args:
+            return None
+        k = args[0]
+        if isinstance(k, ast.Call):  # partial(kernel, ...)
+            f = dotted(k.func)
+            if f in ("partial", "functools.partial") and k.args:
+                k = k.args[0]
+        if isinstance(k, ast.Name):
+            return k.id
+        if isinstance(k, ast.Attribute):
+            return k.attr
+        return None
+
+    @staticmethod
+    def _callees(node: FuncNode) -> set[str]:
+        out = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                if isinstance(sub.func, ast.Name):
+                    out.add(sub.func.id)
+                elif isinstance(sub.func, ast.Attribute):
+                    out.add(sub.func.attr)
+        return out
+
+    # -- queries --------------------------------------------------------
+
+    def resolve(self, name: str) -> list[FunctionInfo]:
+        """Every function a call spelled ``name`` might reach (by name)."""
+        return self.by_name.get(name, [])

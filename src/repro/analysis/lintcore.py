@@ -1,0 +1,93 @@
+"""fleetlint core: findings, config, disable comments, the runner."""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+_DISABLE_RE = re.compile(r"#\s*fleetlint:\s*disable(?:=([A-Za-z0-9_,\s]+))?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    code: str      # FL001..FL005
+    relpath: str   # posix path relative to the scan root
+    line: int
+    col: int
+    message: str
+    hint: str
+
+
+@dataclass
+class LintConfig:
+    """Repo-specific knobs; the defaults match this tree and are also
+    suffix-based so fixture trees in tmp dirs lint identically."""
+
+    # FL001: modules allowed to spell the raw entry-format bits
+    fl001_exempt: tuple[str, ...] = ("core/format.py",)
+    # FL002: hot-path roots (qualnames) and designed traversal boundaries
+    fl002_roots: tuple[str, ...] = ("Engine.step", "PagedKVCache.prepare_step")
+    # MaintenanceScheduler.tick is the *deliberately* host-side
+    # maintenance plane (docs/memory.md): it runs between decode steps,
+    # not inside them, so the traversal stops there.
+    fl002_boundaries: frozenset[str] = frozenset({"MaintenanceScheduler.tick"})
+    # attribute names that hold device-resident arrays
+    fl002_device_attrs: frozenset[str] = frozenset(
+        {"pool", "pool_k", "pool_v", "l1", "l2"})
+    # FL004: modules that own pool/free-list/lease state
+    fl004_owner_modules: tuple[str, ...] = (
+        "core/fleet.py", "core/chain.py", "core/store.py", "kvcache/paged.py")
+    fl004_protected_attrs: frozenset[str] = frozenset(
+        {"pool", "pool_k", "pool_v", "l1", "l2", "_free", "_free_tenants",
+         "_data", "lease_owner", "lease_index", "lease_count"})
+
+
+def disabled_codes_at(lines: list[str], lineno: int) -> set[str]:
+    """Codes disabled by a ``# fleetlint: disable[=CODES]`` comment on
+    the given 1-based line ('*' means all)."""
+    if not (1 <= lineno <= len(lines)):
+        return set()
+    m = _DISABLE_RE.search(lines[lineno - 1])
+    if not m:
+        return set()
+    if m.group(1) is None:
+        return {"*"}
+    return {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+
+
+def _suppressed(f: Finding, lines: list[str]) -> bool:
+    for ln in (f.line, f.line - 1):
+        codes = disabled_codes_at(lines, ln)
+        if "*" in codes or f.code in codes:
+            return True
+    return False
+
+
+def run_lint(root: Path, config: LintConfig | None = None) -> list[Finding]:
+    """Lint every ``*.py`` under *root*; returns unsuppressed findings,
+    sorted by (path, line, code). Unparseable files surface as FL000."""
+    from repro.analysis.callgraph import PackageIndex
+    from repro.analysis.rules import ALL_RULES
+
+    cfg = config or LintConfig()
+    index = PackageIndex(Path(root))
+    findings: list[Finding] = []
+    for rel, msg in index.errors:
+        findings.append(Finding("FL000", rel, 1, 0,
+                                f"could not parse: {msg}", "fix the syntax"))
+    for rule in ALL_RULES:
+        findings.extend(rule(index, cfg))
+
+    lines_by_rel = {m.relpath: m.lines for m in index.modules}
+    kept = [f for f in findings
+            if not _suppressed(f, lines_by_rel.get(f.relpath, []))]
+    return sorted(kept, key=lambda f: (f.relpath, f.line, f.col, f.code))
+
+
+def render(findings: list[Finding]) -> str:
+    out = []
+    for f in findings:
+        out.append(f"{f.relpath}:{f.line}:{f.col + 1}: {f.code} {f.message}")
+        out.append(f"    fix: {f.hint}")
+    return "\n".join(out)

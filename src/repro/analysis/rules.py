@@ -1,0 +1,469 @@
+"""The fleetlint rules (FL001-FL005).
+
+Each rule is a function ``(index, config) -> list[Finding]``; the
+runner in ``lintcore`` applies disable-comment suppression afterwards.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import (
+    FunctionInfo, PackageIndex, dotted, param_names,
+)
+from repro.analysis.lintcore import Finding, LintConfig
+
+RULES: dict[str, str] = {
+    "FL001": "bit-format literal outside core/format.py",
+    "FL002": "device->host sync inside the decode hot path",
+    "FL003": "retrace hazard in a jitted/Pallas function",
+    "FL004": "pool/free-list/L2 write outside its owner",
+    "FL005": "impure Pallas kernel body or index_map",
+}
+
+# L2 entry-format values (core/format.py is their single home).
+# PTR_MASK and the word0 flag bits are distinctive enough to flag as
+# bare literals; BFI_MASK/FLAG_BFI_VALID (65535/65536) collide with
+# innocent sizes (vocab_size=65536), so those only count in bitwise
+# expressions.
+_HARD_VALUES = {268435455, 268435456, 536870912, 1073741824, 2147483648}  # fleetlint: disable=FL001
+_BITWISE_ONLY_VALUES = {65535, 65536}  # fleetlint: disable=FL001
+_ENTRY_SHIFTS = {28, 29, 30, 31}
+_BITWISE_OPS = (ast.BitAnd, ast.BitOr, ast.BitXor, ast.LShift, ast.RShift)
+
+_MUTATORS = {"append", "extend", "insert", "pop", "remove", "clear",
+             "add", "discard", "update", "setdefault", "fill", "sort",
+             "popitem"}
+
+_PURE_BUILTINS = {"min", "max", "abs", "divmod", "len", "int", "sum", "tuple"}
+
+
+def _finding(code: str, mod_rel: str, node: ast.AST, message: str,
+             hint: str) -> Finding:
+    return Finding(code=code, relpath=mod_rel, line=node.lineno,
+                   col=node.col_offset, message=message, hint=hint)
+
+
+# ---------------------------------------------------------------- FL001
+
+def rule_fl001(index: PackageIndex, cfg: LintConfig) -> list[Finding]:
+    hint = ("route the bits through the named constants in core/format.py "
+            "(fmt.PTR_MASK, fmt.FLAG_*, fmt.BFI_MASK)")
+    out = []
+    for mod in index.modules:
+        if any(mod.relpath.endswith(s) for s in cfg.fl001_exempt):
+            continue
+
+        def walk(node: ast.AST, in_bitwise: bool) -> None:
+            here = in_bitwise
+            if isinstance(node, ast.BinOp) and isinstance(node.op, _BITWISE_OPS):
+                here = True
+                if (isinstance(node.op, ast.LShift)
+                        and isinstance(node.right, ast.Constant)
+                        and isinstance(node.right.value, int)):
+                    n = node.right.value
+                    left_is_one = (isinstance(node.left, ast.Constant)
+                                   and node.left.value == 1)
+                    if n in _ENTRY_SHIFTS or (n == 16 and left_is_one):
+                        out.append(_finding(
+                            "FL001", mod.relpath, node,
+                            f"shift by {n} re-derives an L2 entry-format "
+                            "bit position", hint))
+            elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Invert):
+                here = True
+            if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                    and not isinstance(node.value, bool):
+                v = node.value
+                if v in _HARD_VALUES or (here and v in _BITWISE_ONLY_VALUES):
+                    out.append(_finding(
+                        "FL001", mod.relpath, node,
+                        f"integer literal {v} duplicates an L2 entry-format "
+                        "constant", hint))
+            for child in ast.iter_child_nodes(node):
+                walk(child, here)
+
+        walk(mod.tree, False)
+    return _dedup(out)
+
+
+def _dedup(findings: list[Finding]) -> list[Finding]:
+    seen, out = set(), []
+    for f in findings:
+        k = (f.code, f.relpath, f.line, f.col)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------- FL002
+
+class _TaintScan:
+    """Statement-order taint tracking inside one function.
+
+    Sources: jnp./jax. expressions, calls to known-jitted package
+    functions, reads of device-resident attributes (pool, l1, l2, ...).
+    Sinks: int()/float()/bool(), any np.* call, and .item() applied to a
+    tainted value — each sink is a host sync; its *result* is host-side
+    (untainted), so downstream use of an already-synced value is clean.
+    """
+
+    def __init__(self, fn: FunctionInfo, index: PackageIndex,
+                 cfg: LintConfig, root: str, out: list[Finding]):
+        self.fn = fn
+        self.index = index
+        self.cfg = cfg
+        self.root = root
+        self.out = out
+        self.tainted: set[str] = set()
+
+    def run(self) -> None:
+        self.stmts(self.fn.node.body)
+
+    # -- statements -----------------------------------------------------
+
+    def stmts(self, body) -> None:
+        for s in body:
+            self.stmt(s)
+
+    def stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, ast.Assign):
+            t = self.expr(s.value)
+            for target in s.targets:
+                self.bind(target, t)
+        elif isinstance(s, ast.AugAssign):
+            t = self.expr(s.value) or self.expr(s.target)
+            self.bind(s.target, t)
+        elif isinstance(s, ast.AnnAssign) and s.value is not None:
+            self.bind(s.target, self.expr(s.value))
+        elif isinstance(s, (ast.Expr, ast.Return)):
+            if getattr(s, "value", None) is not None:
+                self.expr(s.value)
+        elif isinstance(s, ast.For):
+            self.bind(s.target, self.expr(s.iter))
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.While):
+            self.expr(s.test)
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.If):
+            self.expr(s.test)
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                t = self.expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self.bind(item.optional_vars, t)
+            self.stmts(s.body)
+        elif isinstance(s, ast.Try):
+            self.stmts(s.body)
+            for h in s.handlers:
+                self.stmts(h.body)
+            self.stmts(s.orelse)
+            self.stmts(s.finalbody)
+        elif isinstance(s, (ast.Raise, ast.Assert)):
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.expr):
+                    self.expr(child)
+        # nested defs/classes are scanned on their own if reachable
+
+    def bind(self, target: ast.expr, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.bind(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self.bind(target.value, tainted)
+        # attribute/subscript targets hold no local taint state
+
+    # -- expressions ----------------------------------------------------
+
+    def expr(self, e: ast.expr) -> bool:
+        """True iff *e* evaluates to a (possible) device value."""
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            self.expr(e.value)
+            return e.attr in self.cfg.fl002_device_attrs
+        if isinstance(e, ast.Call):
+            return self.call(e)
+        if isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Lambda):
+            return False
+        tainted = False
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                tainted |= self.expr(child)
+        return tainted
+
+    def call(self, e: ast.Call) -> bool:
+        args_tainted = False
+        for a in e.args:
+            v = a.value if isinstance(a, ast.Starred) else a
+            args_tainted |= self.expr(v)
+        for kw in e.keywords:
+            args_tainted |= self.expr(kw.value)
+
+        f = dotted(e.func)
+        base = f.split(".")[0] if f else None
+        name = f.split(".")[-1] if f else None
+
+        # .item() on a tainted value: unconditional sync
+        if isinstance(e.func, ast.Attribute) and e.func.attr == "item":
+            if self.expr(e.func.value):
+                self.sink(e, ".item()")
+            return False
+
+        if base in ("jnp", "jax"):
+            return True  # device-producing expression
+
+        if isinstance(e.func, ast.Name) and e.func.id in ("int", "float", "bool"):
+            if args_tainted:
+                self.sink(e, f"{e.func.id}(...)")
+            return False
+
+        if base in ("np", "numpy"):
+            if args_tainted:
+                self.sink(e, f"{f}(...)")
+            return False  # numpy results live on the host
+
+        if name in self.index.jitted_names:
+            return True  # call into a jitted package function
+
+        if isinstance(e.func, ast.Attribute):
+            self.expr(e.func.value)
+
+        # unknown helper: conservatively propagate argument taint
+        return args_tainted
+
+    def sink(self, node: ast.AST, what: str) -> None:
+        self.out.append(_finding(
+            "FL002", self.fn.module.relpath, node,
+            f"{what} forces a device->host sync inside the decode hot path "
+            f"({self.fn.qualname}, reachable from {self.root})",
+            "hoist the sync out of the per-step path, or waive the designed "
+            "boundary with `# fleetlint: disable=FL002` and a justification"))
+
+
+def rule_fl002(index: PackageIndex, cfg: LintConfig) -> list[Finding]:
+    out: list[Finding] = []
+    for root in cfg.fl002_roots:
+        roots = index.by_qualname.get(root, [])
+        seen: set[int] = set()
+        queue = list(roots)
+        while queue:
+            fn = queue.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            if fn.qualname in cfg.fl002_boundaries:
+                continue
+            if _def_line_disables(fn, "FL002"):
+                continue  # an explicitly waived function is a boundary
+            _TaintScan(fn, index, cfg, root, out).run()
+            for callee in fn.callees:
+                queue.extend(index.resolve(callee))
+    return _dedup(out)
+
+
+def _def_line_disables(fn: FunctionInfo, code: str) -> bool:
+    from repro.analysis.lintcore import disabled_codes_at
+    lines = fn.module.lines
+    for ln in (fn.node.lineno, fn.node.lineno - 1):
+        codes = disabled_codes_at(lines, ln)
+        if "*" in codes or code in codes:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------- FL003
+
+def rule_fl003(index: PackageIndex, cfg: LintConfig) -> list[Finding]:
+    out = []
+    for mod in index.modules:
+        for fn in mod.functions:
+            if not (fn.is_jitted or fn.is_kernel):
+                continue
+            params = param_names(fn.node)
+            local: set[str] = set(params)
+            for sub in ast.walk(fn.node):
+                if isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                local.add(n.id)
+            for sub in ast.walk(fn.node):
+                if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                        and sub.id in mod.mutable_globals \
+                        and sub.id not in local:
+                    out.append(_finding(
+                        "FL003", mod.relpath, sub,
+                        f"jitted function {fn.qualname} closes over mutable "
+                        f"module state '{sub.id}' (defined at line "
+                        f"{mod.mutable_globals[sub.id]}): jit captures it at "
+                        "trace time and never sees later mutation",
+                        "pass the value as an argument (hashable/static) or "
+                        "freeze it into an immutable constant"))
+                if isinstance(sub, (ast.If, ast.While)):
+                    for n in ast.walk(sub.test):
+                        if (isinstance(n, ast.Attribute) and n.attr == "shape"
+                                and isinstance(n.value, ast.Name)
+                                and n.value.id in params):
+                            out.append(_finding(
+                                "FL003", mod.relpath, sub,
+                                f"jitted function {fn.qualname} branches on "
+                                f"`{n.value.id}.shape`: every new shape "
+                                "retraces and the branches compile to "
+                                "different programs",
+                                "lift the shape decision to the (static) "
+                                "call site, or mark the argument static"))
+    return _dedup(out)
+
+
+# ---------------------------------------------------------------- FL004
+
+def rule_fl004(index: PackageIndex, cfg: LintConfig) -> list[Finding]:
+    hint = ("route the mutation through the owning class "
+            "(ChainFleet / Chain / TieredStore / PagedKVCache method) so "
+            "lease bookkeeping stays consistent")
+    out = []
+    for mod in index.modules:
+        if any(mod.relpath.endswith(s) for s in cfg.fl004_owner_modules):
+            continue
+
+        def protected(t: ast.expr) -> str | None:
+            if isinstance(t, ast.Attribute) and t.attr in cfg.fl004_protected_attrs:
+                return t.attr
+            if isinstance(t, ast.Subscript):
+                return protected(t.value)
+            return None
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                flat = []
+                for t in targets:
+                    flat.extend(t.elts if isinstance(t, (ast.Tuple, ast.List))
+                                else [t])
+                for t in flat:
+                    attr = protected(t)
+                    if attr:
+                        out.append(_finding(
+                            "FL004", mod.relpath, node,
+                            f"write to protected state '.{attr}' outside its "
+                            "owner module", hint))
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATORS:
+                attr = protected(node.func.value)
+                if attr:
+                    out.append(_finding(
+                        "FL004", mod.relpath, node,
+                        f"mutating call .{node.func.attr}() on protected "
+                        f"state '.{attr}' outside its owner module", hint))
+    return _dedup(out)
+
+
+# ---------------------------------------------------------------- FL005
+
+def rule_fl005(index: PackageIndex, cfg: LintConfig) -> list[Finding]:
+    out = []
+    for mod in index.modules:
+        for fn in mod.functions:
+            if fn.is_kernel:
+                _scan_kernel_body(fn, out)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                f = dotted(node.func)
+                if f is not None and f.split(".")[-1] == "BlockSpec":
+                    for lam in _index_map_lambdas(node):
+                        _scan_index_map(lam, mod, out)
+    return _dedup(out)
+
+
+def _scan_kernel_body(fn: FunctionInfo, out: list[Finding]) -> None:
+    params = param_names(fn.node)
+    hint = ("a Pallas kernel body must be pure: all outputs go through "
+            "Ref parameters; move the side effect to the host wrapper")
+    for sub in ast.walk(fn.node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "print":
+            out.append(_finding(
+                "FL005", fn.module.relpath, sub,
+                f"print() inside Pallas kernel {fn.qualname}", hint))
+        elif isinstance(sub, (ast.Global, ast.Nonlocal)):
+            out.append(_finding(
+                "FL005", fn.module.relpath, sub,
+                f"global/nonlocal inside Pallas kernel {fn.qualname}", hint))
+        elif isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute) \
+                and sub.func.attr in _MUTATORS \
+                and not _is_at_indexer(sub.func.value):
+            out.append(_finding(
+                "FL005", fn.module.relpath, sub,
+                f"container mutation .{sub.func.attr}() inside Pallas kernel "
+                f"{fn.qualname}", hint))
+        elif isinstance(sub, (ast.Assign, ast.AugAssign)):
+            targets = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript):
+                    base = t.value
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    if not (isinstance(base, ast.Name) and base.id in params):
+                        out.append(_finding(
+                            "FL005", fn.module.relpath, sub,
+                            "subscript write to a non-parameter object "
+                            f"inside Pallas kernel {fn.qualname}", hint))
+
+
+def _is_at_indexer(node: ast.expr) -> bool:
+    """True for ``X.at[...]`` — jnp's *functional* update, not a mutation."""
+    return (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "at")
+
+
+def _index_map_lambdas(call: ast.Call) -> list[ast.Lambda]:
+    out = []
+    for kw in call.keywords:
+        if kw.arg == "index_map" and isinstance(kw.value, ast.Lambda):
+            out.append(kw.value)
+    for a in call.args:
+        if isinstance(a, ast.Lambda):
+            out.append(a)
+    return out
+
+
+def _scan_index_map(lam: ast.Lambda, mod, out: list[Finding]) -> None:
+    params = {p.arg for p in (*lam.args.posonlyargs, *lam.args.args,
+                              *lam.args.kwonlyargs)}
+    allowed = params | _PURE_BUILTINS | mod.constants
+    hint = ("an index_map must be a pure function of its grid indices "
+            "(plus scalar-prefetch refs): no free variables, no impure calls")
+    for sub in ast.walk(lam.body):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                and sub.id not in allowed:
+            out.append(_finding(
+                "FL005", mod.relpath, sub,
+                f"index_map references free variable '{sub.id}'", hint))
+        elif isinstance(sub, ast.Call):
+            f = dotted(sub.func)
+            leaf = f.split(".")[-1] if f else None
+            if leaf not in _PURE_BUILTINS and leaf not in params:
+                out.append(_finding(
+                    "FL005", mod.relpath, sub,
+                    f"index_map calls '{f or '<expr>'}'", hint))
+
+
+ALL_RULES = [rule_fl001, rule_fl002, rule_fl003, rule_fl004, rule_fl005]

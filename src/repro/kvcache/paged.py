@@ -206,7 +206,9 @@ class PagedKVCache:
         """One stacked fleet resolve of every tenant's full block table;
         one device→host sync. Returns host (tables, owners, lookups,
         colds), each (T, P) int32."""
-        out = np.array(_fleet_tables(self.fleet, self._page_grid(),
+        # the ONE designed sync per decode step: everything downstream
+        # (COW-prepare mask, attention tables) derives from this result
+        out = np.array(_fleet_tables(self.fleet, self._page_grid(),  # fleetlint: disable=FL002
                                      self.resolver))
         return out[0], out[1], out[2], out[3]
 
@@ -232,7 +234,9 @@ class PagedKVCache:
             cold_count=fl.cold_count[t:t + 1],
         )
         grid = jnp.arange(self.cfg.max_blocks_per_seq, dtype=jnp.int32)[None]
-        out = np.array(_fleet_tables(view, grid, self.resolver))
+        # single-tenant admission/fork edge, not the per-step loop: the
+        # decode path itself resolves through _resolve_all
+        out = np.array(_fleet_tables(view, grid, self.resolver))  # fleetlint: disable=FL002
         return out[0, 0], out[1, 0], out[2, 0], out[3, 0]
 
     def _count_lookups(self, seq: _Seq, table_row: np.ndarray,
@@ -699,6 +703,18 @@ class PagedKVCache:
         self._stamp_fleet(writes)
         return self._assemble(sids, tables, pad_to, pad_block)
 
+    def commit_pools(self, pool_k: jax.Array, pool_v: jax.Array) -> None:
+        """Adopt the KV pools returned by an external decode step's
+        in-place scatter. The cache owns ``pool_k``/``pool_v`` (FL004);
+        callers holding the functionally-updated arrays hand them back
+        here instead of reaching into the cache's state."""
+        if pool_k.shape != self.pool_k.shape or pool_v.shape != self.pool_v.shape:
+            raise ValueError(
+                f"commit_pools: shape mismatch {pool_k.shape}/{pool_v.shape} "
+                f"vs cache pools {self.pool_k.shape}")
+        self.pool_k = pool_k
+        self.pool_v = pool_v
+
     def advance(self, sid: int) -> None:
         """Commit one token written externally into a slot set up by
         ``prepare_write``/``prepare_step`` (e.g. by the decode step's
@@ -901,8 +917,10 @@ class PagedKVCache:
             jnp.asarray(ks, self.cfg.dtype))
         self.pool_v = self.pool_v.at[:, sel].set(
             jnp.asarray(vs, self.cfg.dtype))
-        back_k = np.asarray(self.pool_k[:, sel])
-        back_v = np.asarray(self.pool_v[:, sel])
+        # bit-verify readback on the (rare) promote-on-resume edge — the
+        # docs/memory.md residency contract, not a per-step cost
+        back_k = np.asarray(self.pool_k[:, sel])  # fleetlint: disable=FL002
+        back_v = np.asarray(self.pool_v[:, sel])  # fleetlint: disable=FL002
         if (ks.view(np.uint8) != back_k.view(np.uint8)).any() or (
                 vs.view(np.uint8) != back_v.view(np.uint8)).any():
             raise RuntimeError(

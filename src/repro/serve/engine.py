@@ -154,9 +154,11 @@ class Engine:
             self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
             tables, lengths, jnp.asarray(tok_col),
         )
-        self.kv.pool_k, self.kv.pool_v = pk, pv
+        self.kv.commit_pools(pk, pv)
         out = {}
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        # the sampling boundary: greedy argmax must reach the host to
+        # extend python-side sequences — the one designed sync in step()
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # fleetlint: disable=FL002
         for i, sid in enumerate(sids):
             self.kv.advance(sid)
             tok = int(nxt[i])

@@ -1,0 +1,313 @@
+"""fleetlint rule fixtures: every rule has at least one triggering,
+one non-triggering, and one disable-comment case, plus a whole-repo
+run asserting the tree itself is clean and a CLI exit-status check."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import run_lint
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint(tmp_path)
+
+
+def codes(findings):
+    return sorted({f.code for f in findings})
+
+
+# ------------------------------------------------------------- FL001
+
+FL001_BAD = """
+    def unpack(entry):
+        ptr = entry & 268435455
+        cold = entry & (1 << 29)
+        return ptr, cold
+"""
+
+
+def test_fl001_triggers_on_raw_mask_and_shift(tmp_path):
+    fs = lint(tmp_path, {"core/other.py": FL001_BAD})
+    assert codes(fs) == ["FL001"] and len(fs) >= 2
+    assert fs[0].relpath == "core/other.py"
+    assert fs[0].line == 3
+
+
+def test_fl001_exempts_format_module_and_plain_sizes(tmp_path):
+    assert lint(tmp_path, {
+        "core/format.py": FL001_BAD,          # the bits' one home
+        "configs/model.py": "vocab_size = 65536\nrows = 1 << 8\n",
+    }) == []
+
+
+def test_fl001_bfi_mask_only_in_bitwise_context(tmp_path):
+    assert lint(tmp_path, {"a.py": "n = 65535\n"}) == []
+    fs = lint(tmp_path, {"b.py": "n = x & 65535\n"})
+    assert codes(fs) == ["FL001"]
+
+
+def test_fl001_disable_comment(tmp_path):
+    assert lint(tmp_path, {"core/other.py": """
+        ptr = entry & 268435455  # fleetlint: disable=FL001
+    """}) == []
+
+
+# ------------------------------------------------------------- FL002
+
+FL002_BAD = """
+    import jax.numpy as jnp
+
+    class Engine:
+        def step(self):
+            return helper()
+
+    def helper():
+        v = jnp.sum(jnp.ones(3))
+        return int(v)
+"""
+
+
+def test_fl002_triggers_via_call_graph(tmp_path):
+    fs = lint(tmp_path, {"serve/engine.py": FL002_BAD})
+    assert codes(fs) == ["FL002"]
+    assert fs[0].line == 10  # the int(v) line, inside helper
+
+def test_fl002_ignores_functions_off_the_hot_path(tmp_path):
+    assert lint(tmp_path, {"serve/cold.py": """
+        import jax.numpy as jnp
+
+        def offline_report():
+            v = jnp.sum(jnp.ones(3))
+            return int(v)
+    """}) == []
+
+
+def test_fl002_synced_values_are_clean_downstream(tmp_path):
+    # np.asarray IS the sync (one finding); int() of its host result isn't
+    fs = lint(tmp_path, {"serve/engine.py": """
+        import numpy as np, jax.numpy as jnp
+
+        class Engine:
+            def step(self):
+                nxt = np.asarray(jnp.argmax(x))
+                return int(nxt[0])
+    """})
+    assert [f.code for f in fs] == ["FL002"]
+    assert "np.asarray" in fs[0].message
+
+
+def test_fl002_scheduler_tick_is_a_boundary(tmp_path):
+    assert lint(tmp_path, {"core/sched.py": """
+        import numpy as np, jax.numpy as jnp
+
+        class Engine:
+            def step(self):
+                self.scheduler.tick()
+
+        class MaintenanceScheduler:
+            def tick(self):
+                return float(jnp.sum(jnp.ones(2)))
+    """}) == []
+
+
+def test_fl002_disable_on_sink_line_and_def_line(tmp_path):
+    assert lint(tmp_path, {"serve/engine.py": """
+        import jax.numpy as jnp
+
+        class Engine:
+            def step(self):
+                v = jnp.sum(jnp.ones(3))
+                return int(v)  # fleetlint: disable=FL002
+    """}) == []
+    # a waived def is a traversal boundary
+    assert lint(tmp_path, {"serve/engine2.py": """
+        import jax.numpy as jnp
+
+        class Engine:
+            def step(self):  # fleetlint: disable=FL002
+                return int(jnp.sum(jnp.ones(3)))
+    """}) == []
+
+
+# ------------------------------------------------------------- FL003
+
+def test_fl003_triggers_on_mutable_closure_and_shape_branch(tmp_path):
+    fs = lint(tmp_path, {"models/fast.py": """
+        import jax
+
+        _CACHE = {}
+
+        @jax.jit
+        def f(x):
+            return _CACHE["w"] + x
+
+        @jax.jit
+        def g(x):
+            if x.shape[0] > 4:
+                return x + 1
+            return x
+    """})
+    assert codes(fs) == ["FL003"] and len(fs) == 2
+
+
+def test_fl003_ignores_unjitted_functions_and_locals(tmp_path):
+    assert lint(tmp_path, {"models/slow.py": """
+        import jax
+
+        _CACHE = {}
+
+        def warm(x):
+            return _CACHE.setdefault("w", x)
+
+        @jax.jit
+        def f(x):
+            acc = {}
+            acc["y"] = x
+            return acc["y"]
+    """}) == []
+
+
+def test_fl003_disable_comment(tmp_path):
+    assert lint(tmp_path, {"models/fast.py": """
+        import jax
+
+        _TABLE = [1, 2, 3]
+
+        @jax.jit
+        def f(x):
+            # frozen at trace time on purpose
+            return x + _TABLE[0]  # fleetlint: disable=FL003
+    """}) == []
+
+
+# ------------------------------------------------------------- FL004
+
+def test_fl004_triggers_outside_owner_modules(tmp_path):
+    fs = lint(tmp_path, {"serve/other.py": """
+        def hack(kv, fleet):
+            kv.pool_k = 1
+            fleet._free.append(3)
+    """})
+    assert codes(fs) == ["FL004"] and len(fs) == 2
+
+
+def test_fl004_owners_may_write_their_state(tmp_path):
+    assert lint(tmp_path, {"kvcache/paged.py": """
+        class PagedKVCache:
+            def commit(self, pk):
+                self.pool_k = pk
+    """}) == []
+
+
+def test_fl004_disable_comment(tmp_path):
+    assert lint(tmp_path, {"serve/other.py": """
+        def hack(kv):
+            kv.pool_k = 1  # fleetlint: disable=FL004
+    """}) == []
+
+
+# ------------------------------------------------------------- FL005
+
+FL005_BAD = """
+    import jax.experimental.pallas as pl
+
+    TRACE = []
+
+    def _kern(x_ref, o_ref):
+        print("tracing")
+        TRACE.append(1)
+        o_ref[...] = x_ref[...]
+
+    def run(x):
+        return pl.pallas_call(_kern, out_shape=x)(x)
+"""
+
+
+def test_fl005_triggers_on_impure_kernel_body(tmp_path):
+    fs = lint(tmp_path, {"kernels/k.py": FL005_BAD})
+    fl5 = [f for f in fs if f.code == "FL005"]
+    assert len(fl5) == 2  # print + append
+    # closing over the mutable TRACE global is also a retrace hazard
+    assert codes(fs) == ["FL003", "FL005"]
+
+
+def test_fl005_pure_kernel_and_index_map_are_clean(tmp_path):
+    assert lint(tmp_path, {"kernels/k.py": """
+        import jax.experimental.pallas as pl
+
+        def _kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2
+
+        def run(x):
+            return pl.pallas_call(
+                _kern,
+                in_specs=[pl.BlockSpec((8, 128), lambda t: (t, 0))],
+                out_shape=x,
+            )(x)
+    """}) == []
+
+
+def test_fl005_triggers_on_impure_index_map(tmp_path):
+    fs = lint(tmp_path, {"kernels/k.py": """
+        import jax.experimental.pallas as pl
+
+        def _kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x, offsets):
+            return pl.pallas_call(
+                _kern,
+                in_specs=[pl.BlockSpec((8,), lambda t: (offsets[t],))],
+                out_shape=x,
+            )(x)
+    """})
+    assert codes(fs) == ["FL005"]
+
+
+def test_fl005_disable_comment(tmp_path):
+    fs = lint(tmp_path, {"kernels/k.py": """
+        import jax.experimental.pallas as pl
+
+        def _kern(x_ref, o_ref):
+            print("dbg")  # fleetlint: disable=FL005
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+    """})
+    assert fs == []
+
+
+# ----------------------------------------------------- whole repo + CLI
+
+def test_repo_tree_is_clean():
+    assert run_lint(REPO / "src") == []
+
+
+def test_cli_exits_nonzero_with_code_and_location(tmp_path):
+    (tmp_path / "serve").mkdir(parents=True)
+    (tmp_path / "serve" / "engine.py").write_text(textwrap.dedent(FL002_BAD))
+    (tmp_path / "core").mkdir()
+    (tmp_path / "core" / "bits.py").write_text("m = x & 268435455\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "fleetlint.py"), str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "core/bits.py:1" in proc.stdout and "FL001" in proc.stdout
+    assert "serve/engine.py:10" in proc.stdout and "FL002" in proc.stdout
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "fleetlint.py"), str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,148 @@
+"""Coverage for the stdlib CI checkers: check_links anchor validation
+and check_bench artifact-schema validation."""
+
+import importlib.util
+import json
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_links = _load("check_links")
+check_bench = _load("check_bench")
+
+
+# -------------------------------------------------------- check_links
+
+def _md(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return check_links.main(["check_links.py", str(tmp_path)])
+
+
+def test_valid_file_and_anchor_links_pass(tmp_path):
+    assert _md(tmp_path, {
+        "docs/a.md": "# My Title\n\n## Sub-Section two!\nbody\n",
+        "docs/b.md": "[x](a.md) [y](a.md#my-title) "
+                     "[z](a.md#sub-section-two) [w](#local)\n\n# Local\n",
+    }) == 0
+
+
+def test_broken_anchor_fails(tmp_path):
+    assert _md(tmp_path, {
+        "docs/a.md": "# Title\n",
+        "docs/b.md": "[y](a.md#no-such-heading)\n",
+    }) == 1
+
+
+def test_broken_file_still_fails(tmp_path):
+    assert _md(tmp_path, {"a.md": "[y](missing.md)\n"}) == 1
+
+
+def test_duplicate_headings_get_github_suffixes(tmp_path):
+    assert _md(tmp_path, {
+        "a.md": "# Setup\n\n# Setup\n",
+        "b.md": "[one](a.md#setup) [two](a.md#setup-1)\n",
+    }) == 0
+
+
+def test_headings_inside_code_fences_are_not_anchors(tmp_path):
+    assert _md(tmp_path, {
+        "a.md": "```\n# not a heading\n```\n# Real\n",
+        "b.md": "[bad](a.md#not-a-heading)\n",
+    }) == 1
+
+
+def test_slugify_matches_github():
+    assert check_links.slugify("My `Title` — v2.0!") == "my-title--v20"
+    assert check_links.slugify("HBM ↔ host") == "hbm--host"
+
+
+def test_repo_docs_links_are_valid():
+    assert check_links.main(["check_links.py", str(REPO)]) == 0
+
+
+# -------------------------------------------------------- check_bench
+
+def _artifact(tmp_path, payload, name="BENCH_x.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return check_bench.check_artifact(p)
+
+
+TIERED_REC = {
+    "mode": "tiered", "depth": 500, "tenants_live": 24, "pool_rows": 300,
+    "page_size": 8, "worst_tick_ms": 1.0, "mean_tick_ms": 0.5, "ticks": 10,
+    "rows_demoted": 100, "rows_promoted": 10, "host_rows": 90,
+    "stw_demote_ms": 50.0, "promote_wave_ms": 2.0,
+    "ratio_vs_baseline": 6.0, "verified": True,
+}
+
+
+def test_valid_tiering_artifact_passes(tmp_path):
+    assert _artifact(tmp_path, {
+        "benchmark": "tiering", "results": [TIERED_REC], "wave": 4,
+    }) == []
+
+
+def test_missing_required_key_fails(tmp_path):
+    rec = {k: v for k, v in TIERED_REC.items() if k != "ratio_vs_baseline"}
+    errs = _artifact(tmp_path, {"benchmark": "tiering", "results": [rec]})
+    assert errs and "ratio_vs_baseline" in errs[0]
+
+
+def test_unverified_cell_fails(tmp_path):
+    rec = dict(TIERED_REC, verified=False)
+    errs = _artifact(tmp_path, {"benchmark": "tiering", "results": [rec]})
+    assert errs and "not bit-verified" in errs[0]
+
+
+def test_nan_anywhere_fails(tmp_path):
+    rec = dict(TIERED_REC, mean_tick_ms=float("nan"))
+    errs = _artifact(tmp_path, {"benchmark": "tiering", "results": [rec]})
+    assert errs and "non-finite" in errs[0]
+
+
+def test_null_is_not_nan(tmp_path):
+    # baseline cells legitimately carry null tick stats (schema: "null/0
+    # for baseline")
+    rec = dict(TIERED_REC, mode="baseline", worst_tick_ms=None,
+               mean_tick_ms=None, ticks=0)
+    rec.pop("promote_wave_ms")
+    rec.pop("ratio_vs_baseline")
+    assert _artifact(tmp_path, {
+        "benchmark": "tiering", "results": [rec]}) == []
+
+
+def test_fleet_sections_discriminate(tmp_path):
+    good = {"section": "resolver", "tenants": 8, "chain": 500,
+            "method": "pallas_direct", "format": "scalable",
+            "resolve_us": 10.0, "mpages_s": 1.0, "mean_lookups": 1.0}
+    assert _artifact(tmp_path, {
+        "benchmark": "fleet", "results": [good]}) == []
+    bad = dict(good)
+    bad.pop("mean_lookups")
+    errs = _artifact(tmp_path, {"benchmark": "fleet", "results": [bad]})
+    assert errs and "mean_lookups" in errs[0]
+
+
+def test_empty_results_fails(tmp_path):
+    errs = _artifact(tmp_path, {"benchmark": "serve", "results": []})
+    assert errs
+
+
+def test_real_ci_artifact_if_present():
+    p = REPO / "BENCH_tiering.json"
+    if p.exists():
+        assert check_bench.check_artifact(p) == []

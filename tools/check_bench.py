@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Validate ``BENCH_*.json`` artifacts against the schema contract in
+``docs/benchmarks.md``.
+
+Checks, per artifact: the ``benchmark``/``results`` envelope, the
+per-record required keys for that benchmark (section-discriminated for
+``fleet``, mode-discriminated for ``tiering``), the bit-verified flag
+where the schema defines one (``serve``, ``tiering`` — it must be
+present *and* truthy: capacity/speedup numbers from dropped data are
+worse than no numbers), and that no NaN/Inf leaked anywhere in the
+payload. Stdlib only; CI runs it right after the bench-smoke runs:
+
+    python tools/check_bench.py BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+# required keys per record, keyed by benchmark (and discriminator)
+FLEET_SECTIONS = {
+    "fleet_vs_loop": {"tenants", "chain", "method", "fleet_us", "loop_us",
+                      "speedup", "fleet_mpages_s", "mean_lookups"},
+    "resolver": {"tenants", "chain", "method", "format", "resolve_us",
+                 "mpages_s", "mean_lookups"},
+}
+MAINTENANCE_KEYS = {"mode", "tenants", "chain", "k", "ticks",
+                    "worst_tick_ms", "mean_tick_ms", "p50_tick_ms",
+                    "quanta_reclaimed", "final_mean_chain"}
+SERVE_KEYS = {"section", "format", "depth", "batch", "resolver",
+              "host_us", "fleet_us", "speedup", "verified"}
+TIERING_KEYS = {"mode", "depth", "tenants_live", "pool_rows", "page_size",
+                "worst_tick_ms", "mean_tick_ms", "ticks", "rows_demoted",
+                "rows_promoted", "host_rows", "stw_demote_ms", "verified"}
+TIERING_TIERED_KEYS = TIERING_KEYS | {"promote_wave_ms", "ratio_vs_baseline"}
+
+# benchmarks whose records carry a bit-verified flag that must hold
+VERIFIED_BENCHMARKS = {"serve", "tiering"}
+
+
+def _bad_floats(obj, path: str = "$") -> list[str]:
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return [f"{path}: non-finite value {obj!r}"]
+    if isinstance(obj, dict):
+        return [e for k, v in obj.items()
+                for e in _bad_floats(v, f"{path}.{k}")]
+    if isinstance(obj, list):
+        return [e for i, v in enumerate(obj)
+                for e in _bad_floats(v, f"{path}[{i}]")]
+    return []
+
+
+def _record_keys(benchmark: str, rec: dict) -> set[str] | None:
+    """Required keys for one record, or None if the benchmark is unknown
+    (unknown artifacts get only the envelope + NaN checks)."""
+    if benchmark == "fleet":
+        section = rec.get("section")
+        if section not in FLEET_SECTIONS:
+            return {"section"}  # forces a "missing/unknown section" error
+        return FLEET_SECTIONS[section] | {"section"}
+    if benchmark == "maintenance":
+        return MAINTENANCE_KEYS
+    if benchmark == "serve":
+        return SERVE_KEYS
+    if benchmark == "tiering":
+        return (TIERING_TIERED_KEYS if rec.get("mode") == "tiered"
+                else TIERING_KEYS)
+    return None
+
+
+def check_artifact(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable artifact: {e}"]
+
+    if not isinstance(payload, dict):
+        return [f"{path}: top level must be an object"]
+    benchmark = payload.get("benchmark")
+    if not isinstance(benchmark, str):
+        errors.append(f"{path}: missing/invalid 'benchmark' key")
+        benchmark = ""
+    results = payload.get("results")
+    if not isinstance(results, list) or not results:
+        errors.append(f"{path}: 'results' must be a non-empty list")
+        results = []
+
+    for i, rec in enumerate(results):
+        if not isinstance(rec, dict):
+            errors.append(f"{path}: results[{i}] is not an object")
+            continue
+        required = _record_keys(benchmark, rec)
+        if required is not None:
+            missing = sorted(required - rec.keys())
+            if missing:
+                errors.append(
+                    f"{path}: results[{i}] missing keys {missing} "
+                    f"(benchmark={benchmark!r})")
+        if benchmark in VERIFIED_BENCHMARKS and "verified" in rec \
+                and not rec["verified"]:
+            errors.append(
+                f"{path}: results[{i}] verified={rec['verified']!r} — "
+                "the cell's numbers are not bit-verified")
+
+    errors.extend(_bad_floats(payload, f"{path}:$"))
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = [Path(a) for a in argv[1:]]
+    if not paths:
+        print("usage: check_bench.py BENCH_*.json", file=sys.stderr)
+        return 2
+    errors = []
+    for p in paths:
+        errs = check_artifact(p)
+        errors.extend(errs)
+        print(f"{p}: {'OK' if not errs else f'{len(errs)} error(s)'}")
+    for e in errors:
+        print(e)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -1,13 +1,14 @@
 #!/usr/bin/env python3
-"""Verify that relative markdown links in the repo resolve to real files.
+"""Verify that relative markdown links in the repo resolve to real targets.
 
 Scans every tracked-tree ``*.md`` (skipping hidden and cache dirs) for
 inline links/images ``[text](target)``, resolves each relative target
 against the containing file's directory, and fails if any target is
-missing — so the docs tree cannot rot silently. External schemes
-(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
-skipped; a ``file.md#section`` target is checked for the file only
-(anchor names are not validated). Stdlib only; run from anywhere:
+missing — so the docs tree cannot rot silently. Anchors are validated
+too: a ``file.md#section`` (or in-page ``#section``) fragment must
+match a GitHub-style slug of some heading in the target file. External
+schemes (``http(s)://``, ``mailto:``) are skipped. Stdlib only; run
+from anywhere:
 
     python tools/check_links.py [root]
 """
@@ -19,9 +20,49 @@ import sys
 from pathlib import Path
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
 SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", "node_modules",
              ".pytest_cache", "results"}
 SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor algorithm: strip markup, lowercase, drop
+    punctuation, spaces -> hyphens. (Duplicate -1/-2 suffixes are
+    handled by the caller.)"""
+    # strip code/emphasis markers but keep literal underscores: GitHub
+    # slugs `BENCH_*.json` as bench_json (word chars survive)
+    s = re.sub(r"[`*]", "", heading)
+    s = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", s)  # linked headings
+    s = s.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(text: str) -> set[str]:
+    """Every anchor a markdown file exposes (headings outside code
+    fences, with GitHub's duplicate suffixing), plus explicit
+    ``<a name=...>`` / ``id=...`` anchors."""
+    out: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    for m in re.finditer(r"<a\s+(?:name|id)=[\"']([^\"']+)[\"']", text):
+        out.add(m.group(1))
+    return out
 
 
 def iter_markdown(root: Path):
@@ -32,22 +73,36 @@ def iter_markdown(root: Path):
         yield path
 
 
-def check_file(path: Path, root: Path) -> list[str]:
+def check_file(path: Path, root: Path,
+               anchor_cache: dict[Path, set[str]]) -> list[str]:
     errors = []
     text = path.read_text(encoding="utf-8")
+
+    def anchors(p: Path) -> set[str]:
+        if p not in anchor_cache:
+            anchor_cache[p] = anchors_of(p.read_text(encoding="utf-8"))
+        return anchor_cache[p]
+
     for m in LINK_RE.finditer(text):
         target = m.group(1)
-        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+        if target.startswith(SKIP_SCHEMES):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
-            continue
-        resolved = (path.parent / rel).resolve()
+        rel, _, frag = target.partition("#")
+        resolved = (path.parent / rel).resolve() if rel else path.resolve()
+        line = text.count("\n", 0, m.start()) + 1
+        where = path.relative_to(root)
         if not resolved.exists():
-            line = text.count("\n", 0, m.start()) + 1
-            errors.append(
-                f"{path.relative_to(root)}:{line}: broken link -> {target}"
-            )
+            errors.append(f"{where}:{line}: broken link -> {target}")
+            continue
+        if frag:
+            if resolved.suffix.lower() != ".md" or resolved.is_dir():
+                continue  # anchors into non-markdown targets: not ours
+            if frag.lower() not in anchors(resolved):
+                errors.append(
+                    f"{where}:{line}: broken anchor -> {target} "
+                    f"(no heading slugs to '#{frag}' in "
+                    f"{resolved.relative_to(root) if resolved.is_relative_to(root) else resolved})"
+                )
     return errors
 
 
@@ -55,9 +110,10 @@ def main(argv: list[str]) -> int:
     root = Path(argv[1]).resolve() if len(argv) > 1 else Path.cwd()
     errors = []
     n_files = 0
+    anchor_cache: dict[Path, set[str]] = {}
     for md in iter_markdown(root):
         n_files += 1
-        errors.extend(check_file(md, root))
+        errors.extend(check_file(md, root, anchor_cache))
     for err in errors:
         print(err)
     print(f"checked {n_files} markdown files: "

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""fleetlint — AST-level invariant checks for the fleet's contracts.
+
+Usage:
+    python tools/fleetlint.py [PATH ...]      # default: src
+    python tools/fleetlint.py --list-rules
+
+Exit status is non-zero iff any non-waived finding remains. Waive a
+finding with an inline ``# fleetlint: disable=FL00x`` comment on (or
+directly above) the offending line — plus a justification, per the
+waiver policy in docs/invariants.md.
+
+The rule engine lives in ``src/repro/analysis/`` and is stdlib-only,
+so this runs in CI's lint job without installing jax.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import RULES, render, run_lint  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="directories to lint (default: src)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, title in sorted(RULES.items()):
+            print(f"{code}  {title}")
+        return 0
+
+    findings = []
+    for p in args.paths:
+        root = Path(p)
+        if not root.is_absolute():
+            root = REPO / root
+        if not root.is_dir():
+            print(f"fleetlint: not a directory: {p}", file=sys.stderr)
+            return 2
+        findings.extend(run_lint(root))
+
+    if findings:
+        print(render(findings))
+        print(f"\nfleetlint: {len(findings)} finding(s)")
+        return 1
+    print("fleetlint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
