@@ -1,0 +1,175 @@
+"""Migration benchmark: tenant export/import latency vs chain depth.
+
+A provider rebalances by moving snapshot chains between hosts
+(``core.migrate``): the numbers that matter are how long a tenant is
+exposed to the stale-export window (export latency), how long the
+destination takes to land the blob through its own lease allocator
+(import latency), and what the full bit-verified round-trip costs.
+For each depth the harness:
+
+1. builds a depth-D chain per tenant (write + snapshot per layer) and
+   demotes part of one tenant's frozen layers, so every measured blob
+   carries both hot and cold pages;
+2. times ``export_tenant`` / ``import_tenant`` (each import into a
+   freshly reset slot of a different-geometry destination fleet),
+   the full-disk bit-verification, and ``detach_tenant``;
+3. **requires** the verification to pass — a latency number for a
+   migration that corrupted data never reaches the artifact
+   (``verified`` must be truthy; ``tools/check_bench.py`` enforces it).
+
+Emits ``BENCH_migration.json``.
+
+Run: ``PYTHONPATH=src python benchmarks/migration.py``
+CI smoke: ``python benchmarks/migration.py --smoke``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import emit, emit_json
+except ModuleNotFoundError:  # invoked as `python benchmarks/migration.py`
+    import pathlib
+    import sys
+
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
+    from benchmarks.common import emit, emit_json
+from repro.core import fleet as fleet_lib
+from repro.core import migrate
+from repro.core.store import TieredStore
+
+
+def _spec(n_tenants, depth, *, n_pages, page_size, quantum=16):
+    rows = n_tenants * depth + 2 * quantum
+    return fleet_lib.FleetSpec(
+        n_tenants=n_tenants, n_pages=n_pages, page_size=page_size,
+        max_chain=depth + 1,
+        pool_capacity=-(-rows // quantum) * quantum,
+        lease_quantum=quantum, l2_per_table=n_pages, slice_len=1,
+    )
+
+
+def build_fleet(spec, depth: int):
+    """One write + snapshot per layer, every tenant in the batch."""
+    fl = fleet_lib.create(spec)
+    for layer in range(depth):
+        pid = layer % spec.n_pages
+        ids = jnp.full((spec.n_tenants, 1), pid, jnp.int32)
+        data = jnp.full((spec.n_tenants, 1, spec.page_size),
+                        float(layer + 1), jnp.float32)
+        fl = fleet_lib.write(fl, ids, data)
+        if layer + 1 < depth:
+            fl = fleet_lib.snapshot(fl)
+    if np.asarray(fl.overflow).any():
+        raise RuntimeError("benchmark fleet overflowed while building")
+    jax.block_until_ready(fl.l1)
+    return fl
+
+
+def _timed(fn, iters: int):
+    """Median wall-clock ms over ``iters`` calls; returns (ms, result)."""
+    times, result = [], None
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        result = fn()
+        jax.block_until_ready(getattr(result, "pool", result)
+                              if result is not None else 0)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times)), result
+
+
+def bench_depth(depth: int, *, n_pages: int, page_size: int,
+                iters: int) -> dict:
+    spec = _spec(2, depth, n_pages=n_pages, page_size=page_size)
+    fl = build_fleet(spec, depth)
+    store = TieredStore.for_fleet(spec)
+    # tenant 0 (the migrant) carries cold layers whenever the chain has
+    # frozen layers to demote — blobs measure both page classes
+    fl, rep = fleet_lib.demote_tenants(fl, store, [0],
+                                       max_rows=max(depth // 4, 1))
+    dst_spec = _spec(3, depth, n_pages=n_pages, page_size=page_size,
+                     quantum=32)
+    dst = fleet_lib.create(dst_spec, scalable=False)
+    dst_store = TieredStore.for_fleet(dst_spec)
+
+    export_ms, blob = _timed(lambda: migrate.export_tenant(fl, 0,
+                                                           store=store),
+                             iters)
+
+    def _import():
+        # import resets slot 0 each call: every iteration lands in a
+        # freshly evicted slot, like repeated rebalances into one host
+        s = TieredStore.for_fleet(dst_spec) if blob.n_cold else dst_store
+        return migrate.import_tenant(dst, 0, blob, store=s)
+
+    import_ms, _ = _timed(_import, iters)
+
+    want = migrate.materialize_tenant(fl, 0, store=store)
+    # full round-trip through the orchestrator: export + import + verify
+    # + detach, bit-checked internally (raises on mismatch)
+    t0 = time.perf_counter()
+    src_after, dst_after, report = migrate.migrate_tenant(
+        fl, 0, dst, 1, src_store=store, dst_store=dst_store)
+    roundtrip_ms = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    got = migrate.materialize_tenant(dst_after, 1, store=dst_store)
+    verify_ms = (time.perf_counter() - t0) * 1e3
+    if not np.array_equal(want.view(np.uint8), got.view(np.uint8)):
+        raise AssertionError(f"depth {depth}: migrated bytes differ")
+    verified = report["verified"]
+
+    blob2 = migrate.export_tenant(src_after, 1)
+    t0 = time.perf_counter()
+    migrate.detach_tenant(src_after, 1, blob2)
+    detach_ms = (time.perf_counter() - t0) * 1e3
+
+    rec = dict(
+        depth=depth, n_pages=n_pages, page_size=page_size,
+        rows_hot=blob.n_hot, rows_cold=blob.n_cold,
+        blob_kb=blob.nbytes() / 1024,
+        export_ms=export_ms, import_ms=import_ms, verify_ms=verify_ms,
+        detach_ms=detach_ms, roundtrip_ms=roundtrip_ms,
+        verified=bool(verified),
+    )
+    emit(f"migrate_d{depth}", roundtrip_ms * 1e3,
+         f"hot={blob.n_hot};cold={blob.n_cold};"
+         f"export_ms={export_ms:.2f};import_ms={import_ms:.2f}")
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--depths", type=int, nargs="+", default=[1, 64, 500])
+    p.add_argument("--pages", type=int, default=64)
+    p.add_argument("--page-size", type=int, default=32)
+    p.add_argument("--iters", type=int, default=5)
+    p.add_argument("--json", default="BENCH_migration.json",
+                   help="output artifact path ('' disables)")
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI configuration (depth 500 stays in — "
+                        "the deep-chain latency is the point)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        args.page_size, args.iters = 8, 3
+
+    results = [
+        bench_depth(d, n_pages=args.pages, page_size=args.page_size,
+                    iters=args.iters)
+        for d in args.depths
+    ]
+    if args.json:
+        emit_json(args.json, "migration", results, iters=args.iters)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

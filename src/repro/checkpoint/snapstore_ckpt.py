@@ -18,6 +18,9 @@ default 30 — §3 Take-away 2) is ``maybe_stream``.
 
 Durability: ``save_to_dir``/``load_from_dir`` round-trip the whole chain
 through ``.npz`` so a restarted process can resume (trainer restart path).
+Fleet tenants get the same durability via the migration blob
+(``save_tenant_to_dir``/``load_tenant_from_dir`` — a checkpoint of one
+tenant IS a migration into a directory; ``docs/migration.md``).
 Elastic restore: ``restore`` returns replicated host values; pass
 ``shardings`` to place them for a *different* mesh than they were saved
 from (tested by tests/test_checkpoint.py::test_elastic_reshard).
@@ -239,6 +242,38 @@ class SnapshotCheckpointer:
                           else jnp.zeros((), bool)),
         )
         self._shadow = jnp.asarray(z["shadow"]) if z["shadow"].size else None
+
+
+def save_tenant_to_dir(fleet, t: int, path: str, *, store=None) -> None:
+    """Durable per-tenant checkpoint: export tenant ``t`` as a migration
+    blob and write it under ``path``.
+
+    A tenant checkpoint and a migration share one container — the
+    pointer-localized ``TenantBlob`` (``core.migrate``) — so a blob
+    saved here can be restored into *any* fleet whose logical geometry
+    matches, not just a recreation of the one it came from. ``store`` is
+    required when the tenant holds cold (host-tier) layers.
+    """
+    from repro.core import migrate as migrate_lib
+
+    os.makedirs(path, exist_ok=True)
+    blob = migrate_lib.export_tenant(fleet, t, store=store)
+    migrate_lib.save_blob(blob, os.path.join(path, f"tenant_{t}.npz"))
+
+
+def load_tenant_from_dir(fleet, t: int, path: str, *, src_tenant=None,
+                         store=None):
+    """Restore a tenant checkpoint into slot ``t`` of ``fleet``.
+
+    ``src_tenant`` names the slot the blob was saved from (defaults to
+    ``t``); the destination slot is evicted and the blob lands through
+    the fleet's own lease allocator. Returns the updated fleet.
+    """
+    from repro.core import migrate as migrate_lib
+
+    src = t if src_tenant is None else src_tenant
+    blob = migrate_lib.load_blob(os.path.join(path, f"tenant_{src}.npz"))
+    return migrate_lib.import_tenant(fleet, t, blob, store=store)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -617,6 +617,111 @@ def stamp_entries(fleet: ChainFleet, tenants, layers, pages,
     return dataclasses.replace(fleet, l1=l1, l2=l2)
 
 
+# -- migration support: explicit row grants and whole-slot installs ----------
+#
+# ``core.migrate`` packs a tenant into a portable blob and re-attaches it
+# on another fleet. The lease-accounted halves of that live here, in the
+# state's owner module: granting device rows to a tenant outside the
+# ``write`` path, and installing a complete chain (stacks + pool pages)
+# into a slot in one shot.
+
+
+def acquire_rows(fleet: ChainFleet, t: int, n: int):
+    """Grant tenant ``t`` ownership of ``n`` fresh device pool rows.
+
+    The lease-accounted allocation primitive for callers that place page
+    data themselves (migration's attach path): quanta are acquired on
+    demand exactly as in ``write``, and ``alloc_count`` grows by ``n`` so
+    the granted rows are the tenant's next ``n`` lease-order slots.
+
+    Args:
+        fleet: the fleet state (returned updated, never mutated).
+        t: the receiving tenant.
+        n: device rows to grant.
+
+    Returns:
+        ``(fleet, rows)`` — ``rows`` is an (n,) int64 numpy array of
+        global pool row ids, in lease order. Raises ``RuntimeError`` if
+        the pool cannot serve the grant (no partial grants: the lease
+        state is returned untouched in that case because the update is
+        functional).
+    """
+    spec = fleet.spec
+    if n <= 0:
+        return fleet, np.zeros(0, np.int64)
+    need = np.zeros(spec.n_tenants, np.int32)
+    need[t] = n
+    lease_owner, lease_index, lease_count, short = _acquire_leases(
+        fleet, jnp.asarray(need)
+    )
+    if bool(np.asarray(short)[t]):
+        raise RuntimeError(
+            f"pool exhausted granting {n} rows to tenant {t}: free or "
+            "stream other tenants first"
+        )
+    rows, leased = _rows_for(spec, lease_index, fleet.alloc_count, n)
+    rows_t = np.asarray(rows)[t].astype(np.int64)
+    if not np.asarray(leased)[t].all():
+        raise RuntimeError(
+            f"lease table cannot address {n} more rows for tenant {t}"
+        )
+    out = dataclasses.replace(
+        fleet,
+        lease_owner=lease_owner,
+        lease_index=lease_index,
+        lease_count=lease_count,
+        alloc_count=fleet.alloc_count + jnp.asarray(need),
+    )
+    return out, rows_t
+
+
+def install_tenant(fleet: ChainFleet, t: int, *, l1, l2, length: int,
+                   scalable: bool, cold_count: int = 0,
+                   pool_rows=None, pool_data=None) -> ChainFleet:
+    """Install a complete chain into tenant slot ``t`` in one shot.
+
+    The attach half of migration: the slot's L1/L2 stacks are replaced
+    wholesale (layers past ``length`` zeroed), its ``length``/format/
+    ``cold_count`` set, and — when given — ``pool_data`` scattered into
+    ``pool_rows`` (rows the caller obtained from ``acquire_rows``; this
+    is the blob's page payload landing in the device pool). The pressure
+    flags reset: an imported chain starts clean.
+
+    The caller is responsible for slot hygiene (run ``free_tenant``
+    first so a predecessor's leases are returned) and for the entries in
+    ``l2`` pointing only at rows granted to ``t`` — ``core.migrate``
+    remaps blob-local pointers before calling in, and the shared
+    invariant suite (``core.invariants``) checks the result.
+    """
+    spec = fleet.spec
+    length = int(length)
+    if not 1 <= length <= spec.max_chain:
+        raise ValueError(
+            f"cannot install a length-{length} chain into a fleet with "
+            f"max_chain={spec.max_chain}"
+        )
+    l1_full = np.zeros((spec.max_chain, spec.n_l1), np.uint32)
+    l2_full = np.zeros((spec.max_chain, spec.n_pages, 2), np.uint32)
+    l1_full[:length] = np.asarray(l1, np.uint32)
+    l2_full[:length] = np.asarray(l2, np.uint32)
+    pool = fleet.pool
+    if pool_rows is not None and len(pool_rows):
+        pool = pool.at[jnp.asarray(pool_rows, jnp.int32)].set(
+            jnp.asarray(pool_data, spec.dtype)
+        )
+    return dataclasses.replace(
+        fleet,
+        l1=fleet.l1.at[t].set(jnp.asarray(l1_full)),
+        l2=fleet.l2.at[t].set(jnp.asarray(l2_full)),
+        pool=pool,
+        length=fleet.length.at[t].set(length),
+        scalable=fleet.scalable.at[t].set(bool(scalable)),
+        overflow=fleet.overflow.at[t].set(False),
+        snap_dropped=fleet.snap_dropped.at[t].set(False),
+        cold_count=fleet.cold_count.at[t].set(int(cold_count)),
+    )
+
+
 # -- maintenance plane: streaming, GC, lease reclamation ---------------------
 
 

@@ -1,0 +1,355 @@
+"""Tenant live-migration: export → detach → attach, bit-identically.
+
+The provider fleet rebalances by *moving* snapshot chains between hosts
+(the Aquifer/FlexBSO primitive): a tenant's entire chain — L1/L2 words,
+the leased device pool pages its hot entries reference, the host-tier
+pages its ``FLAG_COLD`` entries reference — is packed into a
+self-contained portable blob, freed on the source fleet, and installed
+on a destination fleet that may have completely different pool geometry
+and lease state.
+
+**Blob format.** The blob carries the chain exactly as the guest sees
+it, with pointers *localized*:
+
+* ``l1`` — the tenant's L1 stack, verbatim (layer-relative, geometry-
+  independent).
+* ``l2`` — the tenant's L2 stack with every hot pointer rewritten to an
+  index into ``hot_pages`` and every COLD pointer to an index into
+  ``cold_pages``. All flag bits (ALLOCATED/ZERO/COLD/ENCRYPTED) and the
+  backing-file-index word travel untouched — ``FLAG_COLD`` remains the
+  hot/cold discriminator, so residency survives the move.
+* ``hot_pages`` / ``cold_pages`` — the referenced device/host rows'
+  data, deduplicated (scalable-format chains alias one row from many
+  entries; the blob stores it once).
+* ``fingerprint`` — a digest of the tenant's source state at export
+  time, the mid-flight write guard (below).
+
+Serialization to disk reuses the checkpoint plane's container
+(``checkpoint/snapstore_ckpt.py`` idiom: one compressed ``.npz``, numpy
+arrays only, no pickle).
+
+**Detach/attach lifecycle.** ``export_tenant`` is pure read. The source
+stays writable during export; ``detach_tenant`` recomputes the
+fingerprint and refuses (``MigrationError``) if *anything* about the
+tenant changed since the blob was cut — a write, snapshot, stream,
+compact or demotion landing mid-migration means the blob is stale, and
+the migration must restart from a fresh export. On success detach is
+``free_tenant``: leases back to the allocator, host rows back to the
+store. ``import_tenant`` resets the destination slot, acquires exactly
+the rows it needs through the destination's own lease allocator
+(``acquire_rows``), re-allocates cold rows from the destination's own
+``TieredStore``, delocalizes the pointers, and installs the chain
+(``install_tenant``). ``migrate_tenant`` strings these together and
+bit-verifies source against destination (``read_tiered`` over every
+page) *before* detaching — the source is never dropped until the
+destination provably serves identical bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import fleet as fleet_lib
+from repro.core import format as fmt
+
+
+class MigrationError(RuntimeError):
+    """A migration step refused: stale export, geometry mismatch, or a
+    destination that failed bit-verification."""
+
+
+# -- fingerprint: the mid-flight write guard ---------------------------------
+
+
+def tenant_fingerprint(fleet, t: int) -> str:
+    """Digest of everything about tenant ``t`` that an op could change.
+
+    Covers the L1/L2 stacks (so any write, snapshot, stream, compact,
+    demote or promote changes it — maintenance repacks rewrite pointers
+    even when data is preserved, and the conservative guard treats that
+    as staleness too), plus the scalar per-tenant state.
+    """
+    length = int(fleet.length[t])
+    h = hashlib.sha256()
+    h.update(np.asarray(fleet.l1[t, :length]).tobytes())
+    h.update(np.asarray(fleet.l2[t, :length]).tobytes())
+    h.update(np.asarray(
+        [length, int(fleet.alloc_count[t]), int(fleet.cold_count[t]),
+         int(bool(fleet.scalable[t]))], np.int64
+    ).tobytes())
+    return h.hexdigest()
+
+
+# -- the portable blob -------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantBlob:
+    """A tenant's chain, packed self-contained and geometry-localized."""
+
+    n_pages: int
+    page_size: int
+    l2_per_table: int
+    dtype: str               # numpy dtype name of the page payloads
+    length: int
+    scalable: bool
+    l1: np.ndarray           # (length, n_l1) uint32, verbatim
+    l2: np.ndarray           # (length, n_pages, 2) uint32, ptrs localized
+    hot_pages: np.ndarray    # (n_hot, page_size) — referenced device rows
+    cold_pages: np.ndarray   # (n_cold, page_size) — referenced host rows
+    fingerprint: str         # source state at export time (detach guard)
+
+    @property
+    def n_hot(self) -> int:
+        return self.hot_pages.shape[0]
+
+    @property
+    def n_cold(self) -> int:
+        return self.cold_pages.shape[0]
+
+    def nbytes(self) -> int:
+        return (self.l1.nbytes + self.l2.nbytes
+                + self.hot_pages.nbytes + self.cold_pages.nbytes)
+
+
+def _entry_masks(l2: np.ndarray):
+    """(allocated&data hot, allocated&data cold) masks for an L2 stack."""
+    allocm = np.asarray(fmt.entry_allocated(l2))
+    zerom = np.asarray(fmt.entry_zero(l2))
+    coldm = np.asarray(fmt.entry_cold(l2))
+    data = allocm & ~zerom
+    return data & ~coldm, data & coldm
+
+
+def _rewrite_ptrs(l2: np.ndarray, mask: np.ndarray,
+                  new_ptrs: np.ndarray) -> np.ndarray:
+    """Replace the pointer field of the masked entries, flags untouched."""
+    out = l2.copy()
+    w0 = out[..., 0]
+    w0[mask] = ((w0[mask] & ~np.uint32(fmt.PTR_MASK))
+                | new_ptrs.astype(np.uint32))
+    return out
+
+
+# -- export ------------------------------------------------------------------
+
+
+def export_tenant(fleet, t: int, *, store=None) -> TenantBlob:
+    """Pack tenant ``t`` into a portable blob. Pure read — the source
+    fleet is untouched and stays writable (``detach_tenant`` catches any
+    write that lands in the window).
+
+    ``store`` is required iff the tenant holds demoted (cold) layers:
+    their host-tier pages ride along in the blob.
+    """
+    spec = fleet.spec
+    length = int(fleet.length[t])
+    l1 = np.array(fleet.l1[t, :length])
+    l2 = np.array(fleet.l2[t, :length])
+    hotm, coldm = _entry_masks(l2)
+    ptrs = np.asarray(fmt.entry_ptr(l2)).astype(np.int64)
+
+    hot_rows = np.unique(ptrs[hotm])
+    cold_rows = np.unique(ptrs[coldm])
+    if cold_rows.size and store is None:
+        raise MigrationError(
+            f"tenant {t} holds {cold_rows.size} host-tier rows; pass the "
+            "TieredStore so export can pack its cold pages"
+        )
+
+    if hot_rows.size:
+        hot_pages = np.asarray(fleet.pool[hot_rows])
+    else:
+        hot_pages = np.zeros((0, spec.page_size), np.dtype(spec.dtype))
+    if cold_rows.size:
+        cold_pages = np.asarray(store.get(cold_rows))
+    else:
+        cold_pages = np.zeros((0, spec.page_size), np.dtype(spec.dtype))
+
+    # localize: pointer -> dense index into the blob's page tables
+    l2_local = _rewrite_ptrs(l2, hotm, np.searchsorted(hot_rows, ptrs[hotm]))
+    l2_local = _rewrite_ptrs(l2_local, coldm,
+                             np.searchsorted(cold_rows, ptrs[coldm]))
+
+    return TenantBlob(
+        n_pages=spec.n_pages,
+        page_size=spec.page_size,
+        l2_per_table=spec.l2_per_table,
+        dtype=np.dtype(spec.dtype).name,
+        length=length,
+        scalable=bool(fleet.scalable[t]),
+        l1=l1,
+        l2=l2_local,
+        hot_pages=hot_pages,
+        cold_pages=cold_pages,
+        fingerprint=tenant_fingerprint(fleet, t),
+    )
+
+
+# -- attach ------------------------------------------------------------------
+
+
+def _check_geometry(spec, blob: TenantBlob) -> None:
+    """The destination must agree on the *guest-visible* geometry; pool
+    capacity, lease quantum, tenant count and spare chain depth are the
+    host's business and may all differ."""
+    mismatches = [
+        name for name, got, want in [
+            ("n_pages", spec.n_pages, blob.n_pages),
+            ("page_size", spec.page_size, blob.page_size),
+            ("l2_per_table", spec.l2_per_table, blob.l2_per_table),
+            ("dtype", np.dtype(spec.dtype).name, blob.dtype),
+        ] if got != want
+    ]
+    if mismatches:
+        raise MigrationError(
+            "destination fleet disagrees on guest-visible geometry: "
+            + ", ".join(mismatches)
+        )
+    if blob.length > spec.max_chain:
+        raise MigrationError(
+            f"blob chain depth {blob.length} exceeds destination "
+            f"max_chain={spec.max_chain}"
+        )
+
+
+def import_tenant(fleet, t: int, blob: TenantBlob, *, store=None):
+    """Attach a blob into slot ``t`` of the destination fleet.
+
+    The slot is reset first (``free_tenant`` — a previous occupant's
+    leases and host rows are returned), hot rows are granted through the
+    destination's lease allocator and cold rows through its store, and
+    the blob's localized pointers are rewritten to the new rows. Raises
+    ``MigrationError`` on geometry mismatch, ``RuntimeError`` if the
+    destination pool cannot grant ``blob.n_hot`` rows.
+    """
+    _check_geometry(fleet.spec, blob)
+    if blob.n_cold and store is None:
+        raise MigrationError(
+            f"blob carries {blob.n_cold} cold pages; pass the destination "
+            "TieredStore to land them"
+        )
+    fleet = fleet_lib.free_tenant(fleet, t, store=store)
+    fleet, dev_rows = fleet_lib.acquire_rows(fleet, t, blob.n_hot)
+    host_rows = np.zeros(0, np.int64)
+    if blob.n_cold:
+        host_rows = store.alloc(blob.n_cold)
+        store.put(host_rows, blob.cold_pages)
+
+    l2 = blob.l2
+    hotm, coldm = _entry_masks(l2)
+    local = np.asarray(fmt.entry_ptr(l2)).astype(np.int64)
+    l2 = _rewrite_ptrs(l2, hotm, dev_rows[local[hotm]])
+    if blob.n_cold:
+        l2 = _rewrite_ptrs(l2, coldm, host_rows[local[coldm]])
+
+    return fleet_lib.install_tenant(
+        fleet, t,
+        l1=blob.l1, l2=l2, length=blob.length, scalable=blob.scalable,
+        cold_count=blob.n_cold, pool_rows=dev_rows, pool_data=blob.hot_pages,
+    )
+
+
+def detach_tenant(fleet, t: int, blob: TenantBlob, *, store=None):
+    """Release tenant ``t`` from the source fleet — the commit point of a
+    migration. Refuses with ``MigrationError`` if the tenant's state no
+    longer matches ``blob`` (a write/snapshot/maintenance op landed after
+    export): the blob is stale and must be re-exported.
+    """
+    fp = tenant_fingerprint(fleet, t)
+    if fp != blob.fingerprint:
+        raise MigrationError(
+            f"tenant {t} changed after export (mid-migration write or "
+            "maintenance op): re-export before detaching"
+        )
+    return fleet_lib.free_tenant(fleet, t, store=store)
+
+
+# -- verification & orchestration --------------------------------------------
+
+
+def materialize_tenant(fleet, t: int, *, store=None,
+                       method: str = "auto") -> np.ndarray:
+    """Tenant ``t``'s full guest-visible disk, ``(n_pages, page_size)``
+    numpy, cold pages served from the host tier."""
+    spec = fleet.spec
+    grid = np.broadcast_to(np.arange(spec.n_pages, dtype=np.int32),
+                           (spec.n_tenants, spec.n_pages))
+    data, _ = fleet_lib.read_tiered(fleet, store, grid, method=method)
+    return data[t]
+
+
+def migrate_tenant(src_fleet, src_t: int, dst_fleet, dst_t: int, *,
+                   src_store=None, dst_store=None, method: str = "auto",
+                   verify: bool = True):
+    """Full migration round-trip: export from ``src_fleet[src_t]``,
+    import into ``dst_fleet[dst_t]``, bit-verify every guest page, and
+    only then detach the source.
+
+    Returns ``(src_fleet, dst_fleet, report)``; ``report`` records the
+    blob shape and whether verification ran. On any failure (stale
+    export, geometry mismatch, verification miss) the source tenant is
+    left fully intact.
+    """
+    blob = export_tenant(src_fleet, src_t, store=src_store)
+    dst_fleet = import_tenant(dst_fleet, dst_t, blob, store=dst_store)
+    if verify:
+        want = materialize_tenant(src_fleet, src_t, store=src_store,
+                                  method=method)
+        got = materialize_tenant(dst_fleet, dst_t, store=dst_store,
+                                 method=method)
+        if want.shape != got.shape or not (
+            np.asarray(want).view(np.uint8) == np.asarray(got).view(np.uint8)
+        ).all():
+            raise MigrationError(
+                f"destination tenant {dst_t} is not bit-identical to "
+                f"source tenant {src_t}; source left intact"
+            )
+    src_fleet = detach_tenant(src_fleet, src_t, blob, store=src_store)
+    report = dict(
+        length=blob.length,
+        rows_hot=blob.n_hot,
+        rows_cold=blob.n_cold,
+        blob_bytes=blob.nbytes(),
+        verified=bool(verify),
+    )
+    return src_fleet, dst_fleet, report
+
+
+# -- disk container (checkpoint-plane idiom) ---------------------------------
+
+_META_FIELDS = ("n_pages", "page_size", "l2_per_table", "length")
+
+
+def save_blob(blob: TenantBlob, path) -> None:
+    """Write a blob as one compressed ``.npz`` (numpy arrays only, no
+    pickle — the same container discipline as ``checkpoint/``)."""
+    np.savez_compressed(
+        path,
+        meta=np.asarray([getattr(blob, f) for f in _META_FIELDS], np.int64),
+        scalable=np.asarray(blob.scalable),
+        dtype=np.frombuffer(blob.dtype.encode(), np.uint8),
+        fingerprint=np.frombuffer(blob.fingerprint.encode(), np.uint8),
+        l1=blob.l1,
+        l2=blob.l2,
+        hot_pages=blob.hot_pages,
+        cold_pages=blob.cold_pages,
+    )
+
+
+def load_blob(path) -> TenantBlob:
+    with np.load(path) as z:
+        meta = {f: int(v) for f, v in zip(_META_FIELDS, z["meta"])}
+        return TenantBlob(
+            **meta,
+            scalable=bool(z["scalable"]),
+            dtype=z["dtype"].tobytes().decode(),
+            fingerprint=z["fingerprint"].tobytes().decode(),
+            l1=z["l1"],
+            l2=z["l2"],
+            hot_pages=z["hot_pages"],
+            cold_pages=z["cold_pages"],
+        )

@@ -131,6 +131,23 @@ class TieredStore:
             raise ValueError("freeing host rows that were never allocated")
         self._free.extend(int(r) for r in rows)
 
+    def clone(self) -> "TieredStore":
+        """An isolated copy sharing no state with ``self``.
+
+        Unlike fleets, the store is mutable host state — any flow that
+        wants to speculate against it (a migration dry-run, a test
+        branching one grown fixture into independent futures) must fork
+        it first or later frees corrupt the shared free list.
+        """
+        out = TieredStore(self.page_size, self.dtype,
+                          initial_rows=self._data.shape[0])
+        out._data = self._data.copy()
+        out._free = list(self._free)
+        out._top = self._top
+        out.demoted_rows = self.demoted_rows
+        out.promoted_rows = self.promoted_rows
+        return out
+
     def stats(self) -> dict:
         return dict(
             host_rows_in_use=self.host_rows_in_use(),

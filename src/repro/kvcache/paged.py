@@ -59,6 +59,7 @@ spill — exclusivity is what makes the host copy the unique owner.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
 from typing import Optional
 
@@ -969,6 +970,76 @@ class PagedKVCache:
 
     def seq_length(self, sid: int) -> int:
         return self._seqs[sid].length
+
+    # -- live migration: move a sequence's KV state between caches -------------
+
+    def seq_fingerprint(self, sid: int) -> str:
+        """Digest of everything about a live sequence that a decode step,
+        append, spill or promotion could change — the mid-flight guard
+        for ``export_seq``. A fork of the sequence does *not* change it
+        (COW: the parent's data is untouched), so forks landing during a
+        migration are harmless."""
+        seq = self._live_seq(sid)
+        h = hashlib.sha256()
+        h.update(np.asarray([seq.length], np.int64).tobytes())
+        h.update(np.ascontiguousarray(seq.table).tobytes())
+        h.update(np.ascontiguousarray(seq.owner).tobytes())
+        h.update(np.asarray(sorted(seq.cold), np.int64).tobytes())
+        return h.hexdigest()
+
+    def export_seq(self, sid: int) -> dict:
+        """Pack a live sequence into a portable, self-contained blob.
+
+        The K/V payload is *resolved* — read back through the fork chain
+        and the host tier — so the blob depends on no other sequence:
+        ancestors, tombstones and spilled blocks all stay behind on the
+        source. Pure read (residency is not perturbed; spilled blocks are
+        served from the host tier, not promoted).
+        """
+        cfg = self.cfg
+        k, v = self.gather(sid)
+        return dict(
+            n_layers=cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            dtype=np.dtype(cfg.dtype).name,
+            length=self._live_seq(sid).length,
+            k=np.asarray(k),
+            v=np.asarray(v),
+            fingerprint=self.seq_fingerprint(sid),
+        )
+
+    def import_seq(self, blob: dict) -> int:
+        """Land an exported sequence in this cache as a fresh root.
+
+        The migrated sequence arrives with no parent — its resolved
+        prefix is bulk-appended (``append_prefill``), so its blocks are
+        exclusively owned here and the source-side fork topology does not
+        follow it. Block size, pool size and format flag may all differ
+        from the source cache; the model geometry must match.
+        """
+        cfg = self.cfg
+        for field in ("n_layers", "n_kv_heads", "head_dim"):
+            if blob[field] != getattr(cfg, field):
+                raise ValueError(
+                    f"imported sequence disagrees on {field}: blob has "
+                    f"{blob[field]}, cache has {getattr(cfg, field)}"
+                )
+        if np.dtype(blob["dtype"]) != np.dtype(cfg.dtype):
+            raise ValueError(
+                f"imported sequence dtype {blob['dtype']} != cache dtype "
+                f"{np.dtype(cfg.dtype).name}"
+            )
+        if blob["length"] > cfg.max_blocks_per_seq * cfg.block_size:
+            raise ValueError(
+                f"imported sequence length {blob['length']} exceeds this "
+                "cache's max_blocks_per_seq"
+            )
+        sid = self.new_seq()
+        if blob["length"]:
+            self.append_prefill(sid, jnp.asarray(blob["k"]),
+                                jnp.asarray(blob["v"]))
+        return sid
 
     def blocks_in_use(self) -> int:
         """Blocks holding sequence data (reserved scratch blocks excluded)."""

@@ -123,6 +123,44 @@ class Engine:
         sequence actually decodes."""
         self.active[sid] = self.parked.pop(sid)
 
+    def migrate_request_to(self, dst: "Engine", sid: int) -> int:
+        """Live-migrate a sequence to another engine; returns its sid
+        there.
+
+        The sequence's resolved KV state is exported from this engine's
+        cache, imported into ``dst`` as a fresh root (the fork topology
+        stays behind — ancestors keep serving their own descendants
+        here), bit-verified against the export, and only then retired on
+        the source via ``finish_request`` — which tombstones/reaps
+        exactly as a normal finish would, so migrating a forked child
+        exercises the same cascade. A parked sequence migrates too (its
+        host-tier spill is read, never promoted) and lands *active* on
+        the destination. Raises ``RuntimeError`` — with the destination
+        copy rolled back — if a decode step landed on the source
+        mid-migration (stale export) or the landed bytes differ.
+        """
+        blob = self.kv.export_seq(sid)
+        tokens = list(self.active.get(sid) or self.parked.get(sid) or [])
+        new_sid = dst.kv.import_seq(blob)
+        k, v = dst.kv.gather(new_sid)
+        landed_ok = (
+            np.asarray(k).view(np.uint8) == blob["k"].view(np.uint8)
+        ).all() and (
+            np.asarray(v).view(np.uint8) == blob["v"].view(np.uint8)
+        ).all()
+        stale = self.kv.seq_fingerprint(sid) != blob["fingerprint"]
+        if stale or not landed_ok:
+            dst.kv.free_seq(new_sid)
+            raise RuntimeError(
+                f"migration of sid {sid} aborted "
+                + ("(source sequence changed mid-migration)" if stale
+                   else "(destination KV not bit-identical)")
+                + "; source left intact"
+            )
+        dst.active[new_sid] = tokens
+        self.finish_request(sid)
+        return new_sid
+
     @staticmethod
     def _bucket(n: int) -> int:
         """Next power of two: the decode step is compiled once per bucket,

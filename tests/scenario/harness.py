@@ -1,0 +1,529 @@
+"""Seeded chaos/scenario harness: randomized operational churn with the
+shared invariant suite checked after *every* event.
+
+The clonebox idea made executable: one harness drives both planes of the
+system through the kinds of storms a provider fleet actually sees —
+
+* **fleet plane** (``core.fleet`` + ``core.store`` + the maintenance
+  scheduler): COW write bursts, snapshot (deep-chain) churn, streaming,
+  compaction, scheduler ticks, demote/promote races, tenant free/attach
+  cycles, lease exhaustion, live migration to a second fleet with
+  different geometry, and writes landing mid-migration (the detach guard
+  must fire);
+* **serving plane** (``kvcache.paged``): fork storms, append bursts,
+  tombstone cascades (freeing forked ancestors), park/resume (host
+  spill + promotion), sequence migration between two caches with
+  different block size/pool/format, and decode steps landing
+  mid-migration.
+
+After each event ``repro.core.invariants`` runs over every fleet, store
+and cache involved, and an *independent* host-side data oracle — page
+contents tracked event by event in plain dicts, never read back from the
+system under test — is compared bit-for-bit against ``read_tiered`` /
+``gather`` on a fixed cadence and at the end of the run.
+
+Determinism: all randomness flows from one ``numpy`` generator seeded by
+``ScenarioConfig.seed``, and every event appends a plain-primitive record
+to ``trace`` — same seed, same config ⇒ byte-identical trace (the replay
+self-test in ``test_scenarios.py`` holds the harness to this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fleet as fleet_lib
+from repro.core import migrate
+from repro.core import store as store_lib
+from repro.core.invariants import (
+    check_fleet_invariants,
+    check_kv_invariants,
+)
+from repro.core.scheduler import MaintenanceScheduler
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    seed: int = 0
+    events: int = 200
+    #: full data-oracle comparison cadence (invariants run every event)
+    check_data_every: int = 10
+
+    # source fleet geometry
+    n_tenants: int = 4
+    n_pages: int = 32
+    page_size: int = 4
+    max_chain: int = 6
+    pool_capacity: int = 384
+    lease_quantum: int = 8
+
+    # destination fleet: deliberately different geometry & lease state
+    dst_tenants: int = 3
+    dst_max_chain: int = 8
+    dst_pool_capacity: int = 512
+    dst_lease_quantum: int = 16
+
+    # serving plane (model geometry shared; block/pool/format differ)
+    kv_layers: int = 1
+    kv_heads: int = 1
+    kv_head_dim: int = 4
+    kv_blocks: int = 96
+    kv_block_size: int = 4
+    kv_dst_blocks: int = 64
+    kv_dst_block_size: int = 8
+    kv_max_blocks: int = 8
+
+    write_batch: int = 2     # fixed (T, B) write shape: one jit trace
+
+
+class ScenarioHarness:
+    """One randomized run. ``run()`` fires ``config.events`` events and
+    returns the trace; any invariant violation or oracle mismatch raises
+    ``AssertionError`` at the event that caused it."""
+
+    def __init__(self, config: ScenarioConfig):
+        self.config = config
+        self.rng = np.random.default_rng(config.seed)
+        c = config
+
+        spec = fleet_lib.FleetSpec(
+            n_tenants=c.n_tenants, n_pages=c.n_pages, page_size=c.page_size,
+            max_chain=c.max_chain, pool_capacity=c.pool_capacity,
+            lease_quantum=c.lease_quantum, l2_per_table=c.n_pages,
+        )
+        self.store = store_lib.TieredStore.for_fleet(spec)
+        self.sched = MaintenanceScheduler(
+            fleet_lib.create(spec, scalable=True),
+            max_tenants_per_tick=2, store=self.store,
+            device_page_budget=c.pool_capacity // 2,
+            demote_rows_per_tick=16,
+        )
+        dst_spec = fleet_lib.FleetSpec(
+            n_tenants=c.dst_tenants, n_pages=c.n_pages,
+            page_size=c.page_size, max_chain=c.dst_max_chain,
+            pool_capacity=c.dst_pool_capacity,
+            lease_quantum=c.dst_lease_quantum, l2_per_table=c.n_pages,
+        )
+        self.dst_fleet = fleet_lib.create(dst_spec, scalable=False)
+        self.dst_store = store_lib.TieredStore.for_fleet(dst_spec)
+
+        kv_cfg = PagedKVConfig(
+            n_layers=c.kv_layers, n_kv_heads=c.kv_heads,
+            head_dim=c.kv_head_dim, block_size=c.kv_block_size,
+            n_blocks=c.kv_blocks, max_blocks_per_seq=c.kv_max_blocks,
+            dtype=jnp.float32,
+        )
+        kv_dst_cfg = dataclasses.replace(
+            kv_cfg, block_size=c.kv_dst_block_size, n_blocks=c.kv_dst_blocks,
+        )
+        # vanilla source: forks keep parent links, so freeing ancestors
+        # exercises real tombstone cascades; scalable destination
+        self.kv = PagedKVCache(kv_cfg, scalable=False)
+        self.kv_dst = PagedKVCache(kv_dst_cfg, scalable=True)
+
+        # independent oracles, maintained event by event
+        self.expected: dict[int, dict[int, np.ndarray]] = {
+            t: {} for t in range(c.n_tenants)
+        }
+        self.dst_expected: dict[int, dict[int, np.ndarray]] = {
+            t: {} for t in range(c.dst_tenants)
+        }
+        # sid -> (k, v) numpy (L, length, H, D), per cache
+        self.kv_expected: dict[int, tuple] = {}
+        self.kv_dst_expected: dict[int, tuple] = {}
+        self.kv_parked: set[int] = set()
+
+        self.trace: list[tuple] = []
+        self.invariant_checks = 0
+        self.guard_hits = 0        # mid-migration guards that fired
+        self._step = 0
+
+        self._events = [
+            (self.ev_write, 5),
+            (self.ev_snapshot, 3),
+            (self.ev_stream, 2),
+            (self.ev_compact, 1),
+            (self.ev_tick, 2),
+            (self.ev_demote, 2),
+            (self.ev_promote, 1),
+            (self.ev_free_attach, 1),
+            (self.ev_migrate, 2),
+            (self.ev_mid_migration_write, 1),
+            (self.ev_kv_new, 2),
+            (self.ev_kv_append, 5),
+            (self.ev_kv_fork_storm, 2),
+            (self.ev_kv_free, 2),
+            (self.ev_kv_park, 1),
+            (self.ev_kv_resume, 1),
+            (self.ev_kv_migrate, 2),
+            (self.ev_kv_mid_migration, 1),
+        ]
+        w = np.asarray([wt for _, wt in self._events], np.float64)
+        self._weights = w / w.sum()
+
+    # -- fleet-plane events ---------------------------------------------------
+
+    @property
+    def fleet(self):
+        return self.sched.fleet
+
+    @fleet.setter
+    def fleet(self, value):
+        self.sched.fleet = value
+
+    def _pick_tenant(self) -> int:
+        return int(self.rng.integers(self.config.n_tenants))
+
+    def ev_write(self):
+        """COW write burst; partially-applied batches (lease exhaustion)
+        reconcile the oracle against how many rows actually landed."""
+        c = self.config
+        tmask = self.rng.random(c.n_tenants) < 0.7
+        if not tmask.any():
+            tmask[self._pick_tenant()] = True
+        ids = np.stack([
+            self.rng.choice(c.n_pages, c.write_batch, replace=False)
+            for _ in range(c.n_tenants)
+        ]).astype(np.int32)
+        data = self.rng.standard_normal(
+            (c.n_tenants, c.write_batch, c.page_size)
+        ).astype(np.float32)
+        before = np.asarray(self.fleet.alloc_count)
+        self.fleet = fleet_lib.write(
+            self.fleet, jnp.asarray(ids), jnp.asarray(data),
+            jnp.asarray(tmask),
+        )
+        landed = np.asarray(self.fleet.alloc_count) - before
+        for t in np.flatnonzero(tmask):
+            # write grants rows batch-prefix-first: exactly the first
+            # ``landed[t]`` pages of the batch hit the disk
+            for i in range(int(landed[t])):
+                self.expected[t][int(ids[t, i])] = data[t, i].copy()
+        return ("write", tmask.tolist(), landed.tolist())
+
+    def ev_snapshot(self):
+        mask = self.rng.random(self.config.n_tenants) < 0.5
+        self.fleet = fleet_lib.snapshot(self.fleet, jnp.asarray(mask))
+        return ("snapshot", mask.tolist())
+
+    def ev_stream(self):
+        mask = self.rng.random(self.config.n_tenants) < 0.5
+        upto = int(self.rng.integers(0, self.config.max_chain - 1))
+        self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto)
+        return ("stream", mask.tolist(), upto)
+
+    def ev_compact(self):
+        self.fleet = fleet_lib.compact(self.fleet)
+        return ("compact",)
+
+    def ev_tick(self):
+        rep = self.sched.tick()
+        return ("tick", sorted(rep) if isinstance(rep, dict) else ())
+
+    def ev_demote(self):
+        t = self._pick_tenant()
+        self.fleet, rep = fleet_lib.demote_tenants(
+            self.fleet, self.store, [t],
+            max_rows=int(self.rng.integers(4, 17)),
+        )
+        return ("demote", t, rep["rows_demoted"])
+
+    def ev_promote(self):
+        t = self._pick_tenant()
+        if int(self.fleet.cold_count[t]) == 0:
+            return ("promote", t, "no_cold")
+        try:
+            self.fleet, rep = fleet_lib.promote_tenants(
+                self.fleet, self.store, [t]
+            )
+        except RuntimeError:
+            # device pool can't take the rows back right now — a legal
+            # outcome under pressure, not an invariant violation
+            return ("promote", t, "pool_exhausted")
+        return ("promote", t, rep["rows_promoted"])
+
+    def ev_free_attach(self):
+        t = self._pick_tenant()
+        scalable = bool(self.rng.integers(2))
+        self.fleet = fleet_lib.free_tenant(self.fleet, t, store=self.store)
+        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=scalable)
+        self.expected[t] = {}
+        return ("free_attach", t, scalable)
+
+    def ev_migrate(self):
+        """Move a tenant to the different-geometry destination fleet,
+        bit-verified; a previous migrant in the landing slot is evicted
+        (import resets the slot)."""
+        t = self._pick_tenant()
+        d = int(self.rng.integers(self.config.dst_tenants))
+        self.fleet, self.dst_fleet, report = migrate.migrate_tenant(
+            self.fleet, t, self.dst_fleet, d,
+            src_store=self.store, dst_store=self.dst_store,
+        )
+        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=True)
+        self.dst_expected[d] = self.expected[t]
+        self.expected[t] = {}
+        return ("migrate", t, d, report["rows_hot"], report["rows_cold"])
+
+    def ev_mid_migration_write(self):
+        """A write lands between export and detach: the stale-blob guard
+        must refuse the detach and leave the source tenant intact."""
+        c = self.config
+        t = self._pick_tenant()
+        blob = migrate.export_tenant(self.fleet, t, store=self.store)
+        ids = np.broadcast_to(
+            self.rng.choice(c.n_pages, c.write_batch,
+                            replace=False).astype(np.int32),
+            (c.n_tenants, c.write_batch),
+        )
+        data = self.rng.standard_normal(
+            (c.n_tenants, c.write_batch, c.page_size)
+        ).astype(np.float32)
+        mask = np.zeros(c.n_tenants, bool)
+        mask[t] = True
+        before = int(self.fleet.alloc_count[t])
+        self.fleet = fleet_lib.write(
+            self.fleet, jnp.asarray(ids), jnp.asarray(data),
+            jnp.asarray(mask),
+        )
+        landed = int(self.fleet.alloc_count[t]) - before
+        for i in range(landed):
+            self.expected[t][int(ids[t, i])] = data[t, i].copy()
+        if migrate.tenant_fingerprint(self.fleet, t) == blob.fingerprint:
+            # pool-wedged tenant: nothing landed, the blob is still good
+            return ("mid_migration_write", t, "wedged_no_change")
+        try:
+            migrate.detach_tenant(self.fleet, t, blob, store=self.store)
+        except migrate.MigrationError:
+            self.guard_hits += 1
+            return ("mid_migration_write", t, "guard_fired")
+        raise AssertionError(
+            f"detach of tenant {t} accepted a stale export"
+        )
+
+    # -- serving-plane events -------------------------------------------------
+
+    def _kv_tokens(self, n: int):
+        c = self.config
+        shape = (c.kv_layers, n, c.kv_heads, c.kv_head_dim)
+        return (self.rng.standard_normal(shape).astype(np.float32),
+                self.rng.standard_normal(shape).astype(np.float32))
+
+    def _kv_live(self, *, unparked: bool = False) -> list[int]:
+        sids = sorted(s for s, q in self.kv._seqs.items() if not q.freed)
+        if unparked:
+            sids = [s for s in sids if s not in self.kv_parked]
+        return sids
+
+    def _kv_room(self, blocks: int) -> bool:
+        return len(self.kv._free) >= blocks + 2
+
+    def ev_kv_new(self):
+        sid = self.kv.new_seq()
+        n = int(self.rng.integers(1, 5))
+        bs = self.config.kv_block_size
+        if not self._kv_room(-(-n // bs)):
+            self.kv_expected[sid] = self._kv_tokens(0)
+            return ("kv_new", sid, 0)
+        k, v = self._kv_tokens(n)
+        self.kv.append_prefill(sid, jnp.asarray(k), jnp.asarray(v))
+        self.kv_expected[sid] = (k, v)
+        return ("kv_new", sid, n)
+
+    def ev_kv_append(self):
+        sids = self._kv_live(unparked=True)
+        if not sids:
+            return ("kv_append", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        n = int(self.rng.integers(1, 5))
+        c, bs = self.config, self.config.kv_block_size
+        seq = self.kv._seqs[sid]
+        if (seq.length + n - 1) // bs >= c.kv_max_blocks:
+            return ("kv_append", sid, "at_max")
+        if not self._kv_room(-(-n // bs) + 2):
+            return ("kv_append", sid, "pool_low")
+        k, v = self._kv_tokens(n)
+        self.kv.append_prefill(sid, jnp.asarray(k), jnp.asarray(v))
+        ek, ev = self.kv_expected[sid]
+        self.kv_expected[sid] = (np.concatenate([ek, k], axis=1),
+                                 np.concatenate([ev, v], axis=1))
+        return ("kv_append", sid, n)
+
+    def ev_kv_fork_storm(self):
+        """Fork a live sequence 1–3 times; forking a *parked* parent
+        exercises the promote-on-fork race (a spilled table can't be
+        shared by block id, so the cache un-spills it first)."""
+        sids = self._kv_live()
+        if not sids:
+            return ("kv_fork_storm", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        n_children = int(self.rng.integers(1, 4))
+        children = []
+        for _ in range(n_children):
+            # room for the promote-on-fork un-spill plus slack
+            if not self._kv_room(len(self.kv._seqs[sid].cold) + 2):
+                break
+            child = self.kv.fork(sid)
+            ek, ev = self.kv_expected[sid]
+            self.kv_expected[child] = (ek.copy(), ev.copy())
+            children.append(child)
+        return ("kv_fork_storm", sid, children)
+
+    def ev_kv_free(self):
+        sids = self._kv_live()
+        if len(sids) <= 1:
+            return ("kv_free", "too_few")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        self.kv.free_seq(sid)
+        self.kv_parked.discard(sid)
+        del self.kv_expected[sid]
+        return ("kv_free", sid)
+
+    def ev_kv_park(self):
+        sids = [s for s in self._kv_live() if s not in self.kv_parked]
+        if not sids:
+            return ("kv_park", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        spilled = self.kv.demote_seq(sid)
+        self.kv_parked.add(sid)
+        return ("kv_park", sid, spilled)
+
+    def ev_kv_resume(self):
+        if not self.kv_parked:
+            return ("kv_resume", "none_parked")
+        sids = sorted(self.kv_parked)
+        sid = sids[int(self.rng.integers(len(sids)))]
+        if not self._kv_room(len(self.kv._seqs[sid].cold)):
+            return ("kv_resume", sid, "pool_low")
+        promoted = self.kv.promote_seq(sid)
+        self.kv_parked.discard(sid)
+        return ("kv_resume", sid, promoted)
+
+    def ev_kv_migrate(self):
+        """Move a sequence (parked ones included — their spill is read in
+        place) to the second cache, verify bit-identity, then free it on
+        the source so tombstoned ancestors cascade."""
+        sids = self._kv_live()
+        if not sids:
+            return ("kv_migrate", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        seq = self.kv._seqs[sid]
+        need = -(-seq.length // self.config.kv_dst_block_size)
+        if len(self.kv_dst._free) < need + 2:
+            return ("kv_migrate", sid, "dst_pool_low")
+        blob = self.kv.export_seq(sid)
+        new_sid = self.kv_dst.import_seq(blob)
+        gk, gv = self.kv_dst.gather(new_sid)
+        assert (np.asarray(gk) == blob["k"]).all() \
+            and (np.asarray(gv) == blob["v"]).all(), (
+            f"migrated sid {sid} not bit-identical on the destination"
+        )
+        self.kv.free_seq(sid)
+        self.kv_parked.discard(sid)
+        self.kv_dst_expected[new_sid] = self.kv_expected.pop(sid)
+        return ("kv_migrate", sid, new_sid, seq.length)
+
+    def ev_kv_mid_migration(self):
+        """A decode-style append lands after export: the fingerprint must
+        change, so the migration would abort rather than drop the source."""
+        sids = self._kv_live(unparked=True)
+        if not sids:
+            return ("kv_mid_migration", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        seq = self.kv._seqs[sid]
+        bs = self.config.kv_block_size
+        if (seq.length // bs >= self.config.kv_max_blocks
+                or not self._kv_room(3)):
+            return ("kv_mid_migration", sid, "at_max")
+        blob = self.kv.export_seq(sid)
+        k, v = self._kv_tokens(1)
+        self.kv.append_prefill(sid, jnp.asarray(k), jnp.asarray(v))
+        ek, ev = self.kv_expected[sid]
+        self.kv_expected[sid] = (np.concatenate([ek, k], axis=1),
+                                 np.concatenate([ev, v], axis=1))
+        assert self.kv.seq_fingerprint(sid) != blob["fingerprint"], (
+            f"sid {sid}: append landed after export but the fingerprint "
+            "did not change — the mid-flight guard is blind"
+        )
+        self.guard_hits += 1
+        return ("kv_mid_migration", sid, "guard_fired")
+
+    # -- checking -------------------------------------------------------------
+
+    def check(self, *, data: bool = False):
+        """Run the shared invariant suite over every plane; with
+        ``data=True`` also compare the independent oracles bit-for-bit."""
+        check_fleet_invariants(self.fleet, store=self.store)
+        check_fleet_invariants(self.dst_fleet, store=self.dst_store)
+        check_kv_invariants(self.kv)
+        check_kv_invariants(self.kv_dst)
+        self.invariant_checks += 1
+        if data:
+            self._check_fleet_data(self.fleet, self.store, self.expected,
+                                   "src")
+            self._check_fleet_data(self.dst_fleet, self.dst_store,
+                                   self.dst_expected, "dst")
+            self._check_kv_data(self.kv, self.kv_expected, "src")
+            self._check_kv_data(self.kv_dst, self.kv_dst_expected, "dst")
+
+    def _check_fleet_data(self, fl, st, expected, label):
+        spec = fl.spec
+        grid = np.broadcast_to(np.arange(spec.n_pages, dtype=np.int32),
+                               (spec.n_tenants, spec.n_pages))
+        got, _ = fleet_lib.read_tiered(fl, st, grid)
+        overflowed = np.asarray(fl.overflow)
+        for t, pages in expected.items():
+            if overflowed[t]:
+                # a wedged tenant may have dropped later writes the
+                # oracle can't see the boundary of; structural invariants
+                # still apply, the data oracle re-syncs
+                for p in range(spec.n_pages):
+                    expected[t][p] = np.array(got[t, p])
+                continue
+            want = np.zeros((spec.n_pages, spec.page_size), np.float32)
+            for p, row in pages.items():
+                want[p] = row
+            assert (got[t] == want).all(), (
+                f"{label} fleet tenant {t}: guest pages "
+                f"{np.flatnonzero((got[t] != want).any(axis=1)).tolist()} "
+                "differ from the event-by-event oracle"
+            )
+
+    def _check_kv_data(self, cache, expected, label):
+        for sid, (ek, ev) in expected.items():
+            gk, gv = cache.gather(sid)
+            assert (np.asarray(gk) == ek).all() \
+                and (np.asarray(gv) == ev).all(), (
+                f"{label} cache sid {sid}: gathered KV differs from the "
+                "event-by-event oracle"
+            )
+
+    # -- driving --------------------------------------------------------------
+
+    def step(self) -> tuple:
+        i = int(self.rng.choice(len(self._events), p=self._weights))
+        record = self._events[i][0]()
+        self._step += 1
+        self.trace.append((self._step,) + record)
+        self.check(data=self._step % self.config.check_data_every == 0)
+        return record
+
+    def run(self) -> list[tuple]:
+        for _ in range(self.config.events):
+            self.step()
+        self.check(data=True)
+        return self.trace
+
+    def stats(self) -> dict:
+        return dict(
+            events=self._step,
+            invariant_checks=self.invariant_checks,
+            guard_hits=self.guard_hits,
+            live_seqs=len(self._kv_live()),
+            fleet_rows=int(np.asarray(self.fleet.alloc_count).sum()),
+            host_rows=self.store.host_rows_in_use(),
+        )

@@ -1,0 +1,171 @@
+"""Scenario-harness CI gates: fixed-seed smoke storms, replay
+determinism, and the harness self-test (a deliberately broken fleet the
+invariant suite must catch — a checker that can't fail proves nothing).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet as fleet_lib
+from repro.core import format as fmt
+from repro.core.invariants import (
+    check_fleet_invariants,
+    check_kv_invariants,
+    check_store_invariants,
+)
+from repro.core.store import TieredStore
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+
+from tests.scenario.harness import ScenarioConfig, ScenarioHarness
+
+SMOKE_SEEDS = [0, 1, 2]
+
+
+@pytest.fixture(scope="module")
+def storms():
+    """One >= 200-event storm per smoke seed; every event already ran the
+    invariant suite (run() raises on the first violation)."""
+    out = {}
+    for seed in SMOKE_SEEDS:
+        h = ScenarioHarness(ScenarioConfig(seed=seed, events=200))
+        h.run()
+        out[seed] = h
+    return out
+
+
+@pytest.mark.parametrize("seed", SMOKE_SEEDS)
+def test_smoke_storm(seed, storms):
+    h = storms[seed]
+    assert len(h.trace) == 200
+    assert h.stats()["invariant_checks"] >= 200
+
+
+def test_guard_events_fire(storms):
+    """The storms must actually exercise the mid-migration guards, not
+    just schedule them."""
+    assert sum(h.stats()["guard_hits"] for h in storms.values()) > 0
+
+
+def test_storms_cover_both_planes(storms):
+    """Every storm must hit fleet-plane and serving-plane events — a
+    degenerate weight table would quietly hollow out the suite."""
+    for h in storms.values():
+        kinds = {e[1] for e in h.trace}
+        assert any(k.startswith("kv_") for k in kinds)
+        assert any(not k.startswith("kv_") for k in kinds)
+        assert "migrate" in kinds or "kv_migrate" in kinds
+
+
+def test_replay_determinism():
+    """Same seed, same config ⇒ byte-identical event trace."""
+    cfg = ScenarioConfig(seed=7, events=120)
+    assert ScenarioHarness(cfg).run() == ScenarioHarness(cfg).run()
+
+
+def test_seeds_diverge():
+    """Different seeds must explore different event sequences — a trace
+    that ignores its seed would make the seed matrix worthless."""
+    a = ScenarioHarness(ScenarioConfig(seed=1, events=60)).run()
+    b = ScenarioHarness(ScenarioConfig(seed=2, events=60)).run()
+    assert [e[1:] for e in a] != [e[1:] for e in b]
+
+
+@pytest.mark.slow
+def test_long_randomized_storm():
+    """The deep soak: more seeds, an order of magnitude more events."""
+    for seed in range(3, 6):
+        h = ScenarioHarness(ScenarioConfig(seed=seed, events=1500))
+        h.run()
+        assert h.stats()["invariant_checks"] >= 1500
+
+
+# -- harness self-test: the suite must catch a deliberately broken fleet ------
+
+
+@pytest.fixture(scope="module")
+def grown(storms):
+    """A storm-grown harness for read-only corruption probes (corruptions
+    below go through dataclasses.replace, never the shared state)."""
+    return storms[SMOKE_SEEDS[0]]
+
+
+def test_invariants_catch_stolen_lease(grown):
+    """Clearing a held quantum's owner breaks lease/free-list agreement."""
+    fl = grown.fleet
+    owner = np.asarray(fl.lease_owner).copy()
+    held = np.flatnonzero(owner >= 0)
+    assert held.size, "storm left no leases to corrupt"
+    owner[held[0]] = -1
+    broken = dataclasses.replace(fl, lease_owner=jnp.asarray(owner))
+    with pytest.raises(AssertionError):
+        check_fleet_invariants(broken, store=grown.store)
+
+
+def test_invariants_catch_foreign_row(grown):
+    """Re-pointing one tenant's L2 entry at another tenant's leased row
+    is exactly the cross-tenant aliasing the allocator exists to
+    prevent."""
+    fl = grown.fleet
+    owner = np.asarray(fl.lease_owner)
+    held = np.flatnonzero(owner >= 0)
+    assert held.size
+    victim_q = int(held[0])
+    thief = (int(owner[victim_q]) + 1) % fl.spec.n_tenants
+    foreign = victim_q * fl.spec.lease_quantum
+    entry = fmt.pack_entry(foreign, 0, allocated=True, bfi_valid=False)
+    l2 = fl.l2.at[thief, 0, 0].set(entry)
+    broken = dataclasses.replace(fl, l2=l2)
+    with pytest.raises(AssertionError):
+        check_fleet_invariants(broken, store=grown.store)
+
+
+def test_invariants_catch_cold_count_drift(grown):
+    fl = grown.fleet
+    cc = np.asarray(fl.cold_count).copy()
+    cc[0] += 1
+    broken = dataclasses.replace(fl, cold_count=jnp.asarray(cc))
+    with pytest.raises(AssertionError):
+        check_fleet_invariants(broken, store=grown.store)
+
+
+def test_invariants_catch_double_free_host_row():
+    spec = fleet_lib.FleetSpec(n_tenants=2, n_pages=32, page_size=4,
+                               max_chain=4, pool_capacity=64,
+                               lease_quantum=8, l2_per_table=32)
+    store = TieredStore.for_fleet(spec)
+    rows = store.alloc(4)
+    store.free(rows[:2])
+    store._free.append(int(rows[0]))    # the deliberate corruption
+    with pytest.raises(AssertionError):
+        check_store_invariants(store)
+
+
+def _small_cache():
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=4, block_size=4,
+                        n_blocks=16, max_blocks_per_seq=4,
+                        dtype=jnp.float32)
+    cache = PagedKVCache(cfg, scalable=False)
+    sid = cache.new_seq()
+    k = jnp.zeros((1, 6, 1, 4), jnp.float32)
+    cache.append_prefill(sid, k, k)
+    check_kv_invariants(cache)
+    return cache, sid
+
+
+def test_invariants_catch_refcount_drift():
+    cache, _ = _small_cache()
+    refd = np.flatnonzero(np.asarray(cache._ref) > 0)
+    assert refd.size
+    cache._ref[int(refd[0])] += 1       # the deliberate corruption
+    with pytest.raises(AssertionError):
+        check_kv_invariants(cache)
+
+
+def test_invariants_catch_orphaned_spill():
+    cache, sid = _small_cache()
+    cache._cold_kv[sid] = {0: (np.zeros(1), np.zeros(1))}   # no seq.cold
+    with pytest.raises(AssertionError):
+        check_kv_invariants(cache)

@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import fleet, store
+from repro.core.invariants import check_fleet_invariants
 from repro.core.scheduler import MaintenanceScheduler
 
 N_PAGES, PAGE, MAXC = 64, 4, 8
@@ -88,36 +89,10 @@ def assert_equivalent(fl, chains):
             )
 
 
-def check_lease_invariants(fl):
-    """Leases are disjoint and every referenced row sits in its owner's
-    quanta — the no-cross-tenant-aliasing invariant."""
-    from repro.core import format as fmt
-
-    q = fl.spec.lease_quantum
-    owner = np.asarray(fl.lease_owner)
-    index = np.asarray(fl.lease_index)
-    count = np.asarray(fl.lease_count)
-    alloc = np.asarray(fl.alloc_count)
-    lengths = np.asarray(fl.length)
-    held_all = []
-    for t in range(fl.spec.n_tenants):
-        held = index[t, :count[t]]
-        assert (held >= 0).all(), f"tenant {t} holds an unstitched lease"
-        assert (owner[held] == t).all(), f"tenant {t} lease/owner mismatch"
-        assert (index[t, count[t]:] == -1).all()
-        assert alloc[t] <= count[t] * q
-        held_all.extend(held.tolist())
-        entries = fl.l2[t, :int(lengths[t])]
-        # COLD entries' ptrs address the host tier, not leased device rows
-        live = (np.asarray(fmt.entry_allocated(entries))
-                & ~np.asarray(fmt.entry_zero(entries))
-                & ~np.asarray(fmt.entry_cold(entries)))
-        rows = np.asarray(fmt.entry_ptr(entries))[live]
-        if rows.size:
-            assert (owner[rows // q] == t).all(), \
-                f"tenant {t} references a foreign row"
-    assert len(held_all) == len(set(held_all)), "quantum leased twice"
-    assert sorted(held_all) == sorted(np.flatnonzero(owner >= 0).tolist())
+# The lease-discipline checks were promoted into the shared invariant
+# suite (repro.core.invariants) so the scenario harness and migration
+# verification run the same implementation this file grew them as.
+check_lease_invariants = check_fleet_invariants
 
 
 # -- stream_tenants ≡ chain.stream -------------------------------------------

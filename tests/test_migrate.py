@@ -1,0 +1,370 @@
+"""Tenant and sequence migration: export/detach/attach round-trips must
+be bit-identical across every resolver, chain depths from 1 to 500,
+demoted (cold) layers, different destination geometry, and the serving
+plane's fork/tombstone topology.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fleet as fleet_lib
+from repro.core import migrate
+from repro.core.invariants import check_fleet_invariants, check_kv_invariants
+from repro.core.store import TieredStore
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+
+RESOLVERS = ["vanilla", "direct", "auto", "pallas_vanilla", "pallas_direct"]
+
+N_PAGES = 32
+PAGE = 4
+
+
+def _spec(**kw):
+    base = dict(n_tenants=3, n_pages=N_PAGES, page_size=PAGE, max_chain=8,
+                pool_capacity=4096, lease_quantum=8, l2_per_table=N_PAGES)
+    base.update(kw)
+    return fleet_lib.FleetSpec(**base)
+
+
+def _grow(fl, rng, *, layers, writes_per_layer=2, batch=2):
+    """Random COW churn: ``layers - 1`` snapshots with writes between."""
+    spec = fl.spec
+    for layer in range(layers):
+        if layer:
+            fl = fleet_lib.snapshot(fl)
+        for _ in range(writes_per_layer):
+            ids = np.stack([
+                rng.choice(spec.n_pages, batch, replace=False)
+                for _ in range(spec.n_tenants)
+            ]).astype(np.int32)
+            data = rng.standard_normal(
+                (spec.n_tenants, batch, spec.page_size)
+            ).astype(np.float32)
+            fl = fleet_lib.write(fl, jnp.asarray(ids), jnp.asarray(data))
+    assert not np.asarray(fl.overflow).any()
+    return fl
+
+
+def _dst_fleet(depth):
+    """A destination with different tenant count, pool capacity, lease
+    quantum, spare chain depth and default format flag."""
+    spec = _spec(n_tenants=2, pool_capacity=8192, lease_quantum=16,
+                 max_chain=depth + 2)
+    return fleet_lib.create(spec, scalable=False), TieredStore.for_fleet(spec)
+
+
+@pytest.fixture(scope="module", params=[1, 64, 500])
+def grown(request):
+    """One grown source fleet per depth, shared by the resolver matrix
+    (depth 500 builds a genuinely 500-layer chain — growing it once,
+    not once per resolver, keeps the matrix tractable)."""
+    depth = request.param
+    rng = np.random.default_rng(depth)
+    spec = _spec(max_chain=depth + 1)
+    fl = fleet_lib.create(spec, scalable=True)
+    fl = _grow(fl, rng, layers=depth,
+               writes_per_layer=2 if depth < 500 else 1)
+    store = TieredStore.for_fleet(spec)
+    # tenant 1 carries demoted (cold) layers through every round-trip
+    fl, rep = fleet_lib.demote_tenants(fl, store, [1], max_rows=24)
+    if depth > 1:
+        assert rep["rows_demoted"] > 0
+    check_fleet_invariants(fl, store=store)
+    return depth, fl, store
+
+
+def _own_store(grown):
+    """The fleet value is functional, but the ``TieredStore`` is mutable
+    host state: tests that detach (freeing host rows) get a private
+    copy so the module-scoped fixture stays pristine."""
+    depth, fl, store = grown
+    return depth, fl, store.clone()
+
+
+@pytest.mark.parametrize("method", RESOLVERS)
+def test_round_trip_bit_identical(grown, method):
+    """read/read_tiered before == after for every resolver × depth,
+    into a different-geometry fleet, cold layers included."""
+    depth, fl, store = _own_store(grown)
+    dst, dst_store = _dst_fleet(depth)
+    for t_src, t_dst in [(0, 1), (1, 0)]:       # t=1 holds cold layers
+        before = migrate.materialize_tenant(fl, t_src, store=store,
+                                            method=method)
+        src2, dst, report = migrate.migrate_tenant(
+            fl, t_src, dst, t_dst, src_store=store, dst_store=dst_store,
+            method=method,
+        )
+        after = migrate.materialize_tenant(dst, t_dst, store=dst_store,
+                                           method=method)
+        assert (before == after).all()
+        assert report["length"] == depth and report["verified"]
+        # plain read must agree wherever the destination copy is hot
+        grid = np.broadcast_to(np.arange(N_PAGES, dtype=np.int32),
+                               (dst.spec.n_tenants, N_PAGES))
+        data, res = fleet_lib.read(dst, jnp.asarray(grid), method=method)
+        hot = ~np.asarray(res.cold)[t_dst]
+        assert (np.asarray(data)[t_dst][hot] == after[hot]).all()
+        check_fleet_invariants(src2, store=store)
+        check_fleet_invariants(dst, store=dst_store)
+        if t_src == 1:
+            assert report["rows_cold"] == (0 if depth == 1 else
+                                           int(dst.cold_count[t_dst]))
+
+
+def test_detached_source_slot_is_clean(grown):
+    depth, fl, store = _own_store(grown)
+    dst, dst_store = _dst_fleet(depth)
+    host_before = store.host_rows_in_use()
+    cold_held = int(fl.cold_count[1])
+    fl2, dst, _ = migrate.migrate_tenant(fl, 1, dst, 0,
+                                         src_store=store,
+                                         dst_store=dst_store)
+    assert int(fl2.length[1]) == 1
+    assert int(fl2.lease_count[1]) == 0
+    assert int(fl2.cold_count[1]) == 0
+    # the source's cold rows went back to ITS store; the copies live in
+    # the destination's store now
+    assert store.host_rows_in_use() == host_before - cold_held
+    assert dst_store.host_rows_in_use() == cold_held
+    check_fleet_invariants(fl2, store=store)
+
+
+def test_mid_migration_write_guard(grown):
+    """A write landing between export and detach must make the detach
+    refuse — and leave the source fully intact."""
+    depth, fl, store = _own_store(grown)
+    blob = migrate.export_tenant(fl, 0, store=store)
+    ids = np.zeros((fl.spec.n_tenants, 1), np.int32)
+    data = np.ones((fl.spec.n_tenants, 1, PAGE), np.float32)
+    mask = np.zeros(fl.spec.n_tenants, bool)
+    mask[0] = True
+    fl2 = fleet_lib.write(fl, jnp.asarray(ids), jnp.asarray(data),
+                          jnp.asarray(mask))
+    with pytest.raises(migrate.MigrationError):
+        migrate.detach_tenant(fl2, 0, blob, store=store)
+    # un-written tenants detach fine with their own (fresh) blob
+    blob1 = migrate.export_tenant(fl2, 1, store=store)
+    fl3 = migrate.detach_tenant(fl2, 1, blob1, store=store)
+    check_fleet_invariants(fl3, store=store)
+
+
+def test_maintenance_after_export_is_also_stale(grown):
+    """Streaming rewrites pointers without changing data; the guard is
+    deliberately conservative and treats that as staleness too."""
+    depth, fl, store = _own_store(grown)
+    if depth == 1:
+        pytest.skip("a length-1 chain has nothing to stream")
+    blob = migrate.export_tenant(fl, 0, store=store)
+    fl2 = fleet_lib.stream_tenants(fl, np.asarray([True, False, False]),
+                                   depth - 2)
+    if migrate.tenant_fingerprint(fl2, 0) != blob.fingerprint:
+        with pytest.raises(migrate.MigrationError):
+            migrate.detach_tenant(fl2, 0, blob, store=store)
+
+
+def test_blob_disk_round_trip(grown, tmp_path):
+    depth, fl, store = grown
+    blob = migrate.export_tenant(fl, 1, store=store)
+    path = tmp_path / "tenant1.npz"
+    migrate.save_blob(blob, path)
+    loaded = migrate.load_blob(path)
+    assert loaded.fingerprint == blob.fingerprint
+    assert loaded.length == blob.length and loaded.scalable == blob.scalable
+    for field in ("l1", "l2", "hot_pages", "cold_pages"):
+        assert (getattr(loaded, field) == getattr(blob, field)).all()
+    dst, dst_store = _dst_fleet(depth)
+    dst = migrate.import_tenant(dst, 1, loaded, store=dst_store)
+    assert (migrate.materialize_tenant(fl, 1, store=store)
+            == migrate.materialize_tenant(dst, 1, store=dst_store)).all()
+
+
+def test_checkpoint_tenant_dir_round_trip(grown, tmp_path):
+    """The checkpoint plane's per-tenant durability rides the migration
+    blob: save into a directory, restore into a different-geometry
+    fleet (trainer-restart path for one fleet tenant)."""
+    from repro.checkpoint import snapstore_ckpt
+
+    depth, fl, store = grown
+    snapstore_ckpt.save_tenant_to_dir(fl, 1, str(tmp_path), store=store)
+    dst, dst_store = _dst_fleet(depth)
+    dst = snapstore_ckpt.load_tenant_from_dir(dst, 0, str(tmp_path),
+                                              src_tenant=1, store=dst_store)
+    assert (migrate.materialize_tenant(fl, 1, store=store)
+            == migrate.materialize_tenant(dst, 0, store=dst_store)).all()
+    check_fleet_invariants(dst, store=dst_store)
+
+
+def test_import_refuses_geometry_mismatch():
+    rng = np.random.default_rng(0)
+    fl = _grow(fleet_lib.create(_spec(), scalable=True), rng, layers=2)
+    blob = migrate.export_tenant(fl, 0)
+    bad = fleet_lib.create(
+        fleet_lib.FleetSpec(n_tenants=2, n_pages=2 * N_PAGES, page_size=PAGE,
+                            max_chain=8, pool_capacity=4096, lease_quantum=8,
+                            l2_per_table=2 * N_PAGES))
+    with pytest.raises(migrate.MigrationError, match="n_pages"):
+        migrate.import_tenant(bad, 0, blob)
+    shallow = fleet_lib.create(_spec(max_chain=blob.length))
+    # max_chain == length fits exactly; one less must refuse
+    migrate.import_tenant(shallow, 0, blob)
+    if blob.length > 1:
+        too_shallow = fleet_lib.create(_spec(max_chain=blob.length - 1))
+        with pytest.raises(migrate.MigrationError, match="max_chain"):
+            migrate.import_tenant(too_shallow, 0, blob)
+
+
+def test_import_evicts_previous_occupant():
+    """Landing a migrant in an occupied slot resets it first — leases
+    and host rows of the evictee are returned, not leaked."""
+    rng = np.random.default_rng(1)
+    fl = _grow(fleet_lib.create(_spec(), scalable=True), rng, layers=3)
+    store = TieredStore.for_fleet(fl.spec)
+    fl, _ = fleet_lib.demote_tenants(fl, store, [2], max_rows=8)
+    dst, dst_store = _dst_fleet(3)
+    dst = migrate.import_tenant(
+        dst, 0, migrate.export_tenant(fl, 2, store=store), store=dst_store)
+    occupied_host = dst_store.host_rows_in_use()
+    dst = migrate.import_tenant(
+        dst, 0, migrate.export_tenant(fl, 0, store=store), store=dst_store)
+    assert dst_store.host_rows_in_use() < occupied_host or occupied_host == 0
+    assert (migrate.materialize_tenant(fl, 0, store=store)
+            == migrate.materialize_tenant(dst, 0, store=dst_store)).all()
+    check_fleet_invariants(dst, store=dst_store)
+
+
+# -- serving plane: sequence migration between caches/engines ----------------
+
+
+KV = PagedKVConfig(n_layers=2, n_kv_heads=1, head_dim=4, block_size=4,
+                   n_blocks=64, max_blocks_per_seq=8, dtype=jnp.float32)
+KV_DST = PagedKVConfig(n_layers=2, n_kv_heads=1, head_dim=4, block_size=8,
+                       n_blocks=32, max_blocks_per_seq=8, dtype=jnp.float32)
+
+
+def _toks(rng, n):
+    shape = (2, n, 1, 4)
+    return (jnp.asarray(rng.standard_normal(shape), jnp.float32),
+            jnp.asarray(rng.standard_normal(shape), jnp.float32))
+
+
+def test_seq_migration_with_tombstoned_ancestor():
+    """Migrate a forked child while its freed parent is a tombstone; the
+    source-side free after migration must reap the whole dead chain."""
+    rng = np.random.default_rng(2)
+    src = PagedKVCache(KV, scalable=False)   # vanilla: real parent links
+    dst = PagedKVCache(KV_DST, scalable=True)
+
+    root = src.new_seq()
+    k, v = _toks(rng, 10)
+    src.append_prefill(root, k, v)
+    child = src.fork(root)
+    k2, v2 = _toks(rng, 5)
+    src.append_prefill(child, k2, v2)
+    src.free_seq(root)
+    assert src._seqs[root].freed          # tombstoned, pinned by child
+    check_kv_invariants(src)
+
+    want_k, want_v = src.gather(child)
+    blob = src.export_seq(child)
+    new_sid = dst.import_seq(blob)
+    got_k, got_v = dst.gather(new_sid)
+    assert (np.asarray(got_k) == np.asarray(want_k)).all()
+    assert (np.asarray(got_v) == np.asarray(want_v)).all()
+
+    src.free_seq(child)                   # detach: cascade reaps the chain
+    assert root not in src._seqs and child not in src._seqs
+    assert src.blocks_in_use() == 0
+    check_kv_invariants(src)
+    check_kv_invariants(dst)
+
+
+def test_seq_migration_of_spilled_sequence():
+    """A parked (host-spilled) sequence migrates without being promoted
+    on the source."""
+    rng = np.random.default_rng(3)
+    src = PagedKVCache(KV, scalable=False)
+    dst = PagedKVCache(KV_DST, scalable=True)
+    sid = src.new_seq()
+    k, v = _toks(rng, 9)
+    src.append_prefill(sid, k, v)
+    spilled = src.demote_seq(sid)
+    assert spilled > 0
+    host_before = src.host_blocks_in_use()
+    blob = src.export_seq(sid)
+    assert src.host_blocks_in_use() == host_before   # residency untouched
+    new_sid = dst.import_seq(blob)
+    gk, gv = dst.gather(new_sid)
+    assert (np.asarray(gk) == blob["k"]).all()
+    assert (np.asarray(gv) == blob["v"]).all()
+    check_kv_invariants(src)
+    check_kv_invariants(dst)
+
+
+def test_engine_migration_decode_parity():
+    """A request migrated between engines (different block size, pool
+    size and format) keeps decoding exactly as an unmigrated reference."""
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.serve.engine import Engine
+
+    key = jax.random.PRNGKey(0)
+    cfg = smoke_config("qwen2-7b")
+    params = get_model(cfg).init(key)
+    prompt = np.asarray(jax.random.randint(key, (9,), 0, cfg.vocab_size))
+
+    src = Engine(cfg, params, scalable=False, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16)
+    dst = Engine(cfg, params, scalable=True, n_blocks=96, block_size=8,
+                 max_blocks_per_seq=8)
+    ref = Engine(cfg, params, scalable=True, n_blocks=64, block_size=4,
+                 max_blocks_per_seq=16)
+
+    a = src.add_request(prompt)
+    r = ref.add_request(prompt)
+    outs_a = [src.step() for _ in range(2)]
+    outs_r = [ref.step() for _ in range(2)]
+    assert [o[a] for o in outs_a] == [o[r] for o in outs_r]
+
+    b = src.fork_request(a)
+    src.finish_request(a)                   # tombstone the parent
+    new = src.migrate_request_to(dst, b)
+    assert not src.active and new in dst.active
+    check_kv_invariants(src.kv)
+    check_kv_invariants(dst.kv)
+
+    outs_d = [dst.step() for _ in range(3)]
+    outs_r2 = [ref.step() for _ in range(3)]
+    assert [o[new] for o in outs_d] == [o[r] for o in outs_r2]
+
+    # decode landing mid-migration flips the fingerprint guard
+    c = src.add_request(prompt)
+    blob = src.kv.export_seq(c)
+    src.step()
+    assert src.kv.seq_fingerprint(c) != blob["fingerprint"]
+
+
+def test_import_seq_refuses_model_geometry_mismatch():
+    rng = np.random.default_rng(4)
+    src = PagedKVCache(KV, scalable=True)
+    sid = src.new_seq()
+    k, v = _toks(rng, 4)
+    src.append_prefill(sid, k, v)
+    blob = src.export_seq(sid)
+    bad = PagedKVCache(
+        PagedKVConfig(n_layers=3, n_kv_heads=1, head_dim=4, block_size=4,
+                      n_blocks=16, max_blocks_per_seq=4,
+                      dtype=jnp.float32))
+    with pytest.raises(ValueError, match="n_layers"):
+        bad.import_seq(blob)
+    tiny = PagedKVCache(
+        PagedKVConfig(n_layers=2, n_kv_heads=1, head_dim=4, block_size=4,
+                      n_blocks=16, max_blocks_per_seq=1,
+                      dtype=jnp.float32))
+    with pytest.raises(ValueError, match="max_blocks_per_seq"):
+        tiny.import_seq(
+            {**blob, "length": 5,
+             "k": np.zeros((2, 5, 1, 4), np.float32),
+             "v": np.zeros((2, 5, 1, 4), np.float32)})

@@ -22,7 +22,7 @@ import pytest
 from repro.core import fleet, format as fmt, metrics
 from repro.core.scheduler import MaintenanceScheduler
 from repro.core.store import TieredStore
-from tests.test_maintenance import check_lease_invariants
+from repro.core.invariants import check_fleet_invariants as check_lease_invariants
 
 N_PAGES, PAGE = 32, 4
 

@@ -5,8 +5,8 @@
 Checks, per artifact: the ``benchmark``/``results`` envelope, the
 per-record required keys for that benchmark (section-discriminated for
 ``fleet``, mode-discriminated for ``tiering``), the bit-verified flag
-where the schema defines one (``serve``, ``tiering`` — it must be
-present *and* truthy: capacity/speedup numbers from dropped data are
+where the schema defines one (``serve``, ``tiering``, ``migration`` —
+it must be present *and* truthy: capacity/speedup numbers from dropped data are
 worse than no numbers), and that no NaN/Inf leaked anywhere in the
 payload. Stdlib only; CI runs it right after the bench-smoke runs:
 
@@ -36,9 +36,12 @@ TIERING_KEYS = {"mode", "depth", "tenants_live", "pool_rows", "page_size",
                 "worst_tick_ms", "mean_tick_ms", "ticks", "rows_demoted",
                 "rows_promoted", "host_rows", "stw_demote_ms", "verified"}
 TIERING_TIERED_KEYS = TIERING_KEYS | {"promote_wave_ms", "ratio_vs_baseline"}
+MIGRATION_KEYS = {"depth", "n_pages", "page_size", "rows_hot", "rows_cold",
+                  "blob_kb", "export_ms", "import_ms", "verify_ms",
+                  "detach_ms", "roundtrip_ms", "verified"}
 
 # benchmarks whose records carry a bit-verified flag that must hold
-VERIFIED_BENCHMARKS = {"serve", "tiering"}
+VERIFIED_BENCHMARKS = {"serve", "tiering", "migration"}
 
 
 def _bad_floats(obj, path: str = "$") -> list[str]:
@@ -68,6 +71,8 @@ def _record_keys(benchmark: str, rec: dict) -> set[str] | None:
     if benchmark == "tiering":
         return (TIERING_TIERED_KEYS if rec.get("mode") == "tiered"
                 else TIERING_KEYS)
+    if benchmark == "migration":
+        return MIGRATION_KEYS
     return None
 
 
