@@ -19,6 +19,13 @@ regime (vanilla cost grows with depth, scalable stays O(1)). Both paths
 run on an identical settled cache and the produced tables are verified
 bit-identical per cell before timing.
 
+A second section, ``decode``, measures the whole serving step end to
+end: two engines over a tiny one-layer model decode the same fork-chain
+workload, one with ``decode_path="tables"`` (stacked resolve → padded
+tables → transfer) and one with ``decode_path="fused"`` (narrow
+COW-prepare resolve, chain walk inside the attention plane, zero table
+materialization). Each cell is token- and table-verified before timing.
+
 Run: ``PYTHONPATH=src python benchmarks/serve.py --json BENCH_serve.json``
 (see ``docs/benchmarks.md`` for the JSON schema).
 """
@@ -26,7 +33,9 @@ Run: ``PYTHONPATH=src python benchmarks/serve.py --json BENCH_serve.json``
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,7 +49,11 @@ except ModuleNotFoundError:  # invoked as `python benchmarks/serve.py`
     sys.path.insert(0, str(_root))
     sys.path.insert(0, str(_root / "src"))  # repro without pip install -e
     from benchmarks.common import emit, emit_json, time_fn
+from repro.configs import smoke_config
+from repro.kernels.paged_attention import ref as pa_ref
 from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+from repro.models.api import get_model
+from repro.serve.engine import Engine
 
 
 def build_forked_cache(depth: int, *, scalable: bool, batch: int,
@@ -130,6 +143,77 @@ def bench_cell(depth: int, scalable: bool, args) -> dict:
     )
 
 
+def build_forked_engine(depth: int, *, scalable: bool, decode_path: str,
+                        cfg, params, args) -> Engine:
+    """An engine whose batch sits under a fork chain of ``depth`` retired
+    ancestors — the engine-level twin of ``build_forked_cache``. Both
+    decode paths get byte-identical construction (same RNG, same op
+    order), so their pools and fleet indices match bit for bit."""
+    eng = Engine(cfg, params, scalable=scalable, n_blocks=args.n_blocks,
+                 block_size=args.block_size, max_blocks_per_seq=128,
+                 resolver="gather", decode_path=decode_path)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=31)
+    sid = eng.add_request(np.asarray(prompt))
+    one = jnp.asarray(
+        rng.standard_normal((cfg.n_layers, cfg.n_kv_heads, cfg.hd)),
+        jnp.float32)
+    for _ in range(depth):
+        child = eng.fork_request(sid)
+        eng.kv.append(child, one, one)      # each generation diverges
+        eng.finish_request(sid)             # tombstone the ancestor
+        sid = child
+    for _ in range(args.batch - 1):
+        leaf = eng.fork_request(sid)
+        eng.kv.append(leaf, one, one)
+    return eng
+
+
+def verify_decode_cell(eng_t: Engine, eng_f: Engine) -> None:
+    """Bit-verify a decode cell before timing it: the fused walk oracle
+    must reproduce the host chain-walk oracle's tables for every live
+    sequence, and one full step on each engine must emit identical
+    tokens and leave identical allocation."""
+    kv = eng_f.kv
+    sids = sorted(eng_f.active)
+    tenants = jnp.asarray([kv._seqs[s].tenant for s in sids], jnp.int32)
+    fused = np.asarray(pa_ref.fused_tables_ref(
+        kv.fleet.l2[..., 0], kv.fleet.length, tenants))
+    for i, sid in enumerate(sids):
+        table, _, _ = kv._resolve_oracle(sid)
+        np.testing.assert_array_equal(fused[i], table)
+    out_t, out_f = eng_t.step(), eng_f.step()
+    assert list(out_t.values()) == list(out_f.values()), (
+        f"fused decode diverged from tables decode: {out_t} vs {out_f}")
+    assert eng_t.kv.blocks_in_use() == eng_f.kv.blocks_in_use()
+
+
+def bench_decode_cell(depth: int, scalable: bool, cfg, params,
+                      args) -> dict:
+    build = lambda path: build_forked_engine(
+        depth, scalable=scalable, decode_path=path, cfg=cfg, params=params,
+        args=args)
+    eng_t, eng_f = build("tables"), build("fused")
+    verify_decode_cell(eng_t, eng_f)
+    t_tables = time_fn(eng_t.step, warmup=1, iters=args.iters)
+    t_fused = time_fn(eng_f.step, warmup=1, iters=args.iters)
+    fmt_name = "scalable" if scalable else "vanilla"
+    emit(f"decode_{fmt_name}_depth{depth}", t_fused * 1e6,
+         f"tables_us={t_tables * 1e6:.0f};fused_us={t_fused * 1e6:.0f};"
+         f"speedup={t_tables / t_fused:.2f}x;batch={len(eng_f.active)}")
+    return dict(
+        section="decode",
+        format=fmt_name,
+        depth=depth,
+        batch=len(eng_f.active),
+        resolver="gather",
+        tables_us=t_tables * 1e6,
+        fused_us=t_fused * 1e6,
+        speedup=t_tables / t_fused,
+        verified=True,
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--depths", type=int, nargs="+", default=[1, 64, 500],
@@ -155,11 +239,25 @@ def main():
     for depth in args.depths:
         for scalable in (False, True):
             results.append(bench_cell(depth, scalable, args))
+    # end-to-end decode: tables path vs fused path over a tiny model
+    cfg = dataclasses.replace(smoke_config("qwen2-7b"), n_layers=1)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    for depth in args.depths:
+        for scalable in (False, True):
+            results.append(bench_decode_cell(depth, scalable, cfg, params,
+                                             args))
     for r in results:
         if r["depth"] >= 64 and r["format"] == "vanilla":
-            assert r["speedup"] > 1.0, (
-                f"fleet-backed prep lost to host numpy at depth {r['depth']}"
-            )
+            if r["section"] == "serve_step":
+                assert r["speedup"] > 1.0, (
+                    "fleet-backed prep lost to host numpy at depth "
+                    f"{r['depth']}"
+                )
+            elif r["depth"] >= 500:
+                assert r["speedup"] > 1.0, (
+                    "fused decode lost to the tables path at depth "
+                    f"{r['depth']}"
+                )
     if args.json:
         emit_json(
             args.json, "serve", results,

@@ -27,7 +27,8 @@ class LintConfig:
     # FL001: modules allowed to spell the raw entry-format bits
     fl001_exempt: tuple[str, ...] = ("core/format.py",)
     # FL002: hot-path roots (qualnames) and designed traversal boundaries
-    fl002_roots: tuple[str, ...] = ("Engine.step", "PagedKVCache.prepare_step")
+    fl002_roots: tuple[str, ...] = ("Engine.step", "PagedKVCache.prepare_step",
+                                    "PagedKVCache.prepare_step_fused")
     # MaintenanceScheduler.tick is the *deliberately* host-side
     # maintenance plane (docs/memory.md): it runs between decode steps,
     # not inside them, so the traversal stops there.

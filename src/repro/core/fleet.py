@@ -328,12 +328,21 @@ resolve_vanilla = _batched_resolver("vanilla")
 resolve_direct = _batched_resolver("direct")
 
 
+def fused_layout_ok(n_pages: int) -> bool:
+    """The lane-alignment rule the kernel plane's auto-selection shares:
+    a stacked index whose page axis is a 128-lane multiple tiles the
+    Pallas kernels with no padding. ``resolve_auto`` uses it to pick the
+    kernel resolvers, and the serving engine uses it to pick the fused
+    chain-resolve attention path (``Engine(decode_path="auto")``)."""
+    return n_pages % 128 == 0
+
+
 def _kernel_layout_ok(spec: FleetSpec) -> bool:
     """Static (trace-time) rule for ``method="auto"``: use the Pallas
     kernels only when the page axis is already a 128-lane multiple, so the
     stacked tables tile with no padding. Explicit ``pallas_*`` methods pad
     and run the kernel regardless."""
-    return spec.n_pages % 128 == 0
+    return fused_layout_ok(spec.n_pages)
 
 
 @jax.jit

@@ -56,6 +56,20 @@ class ResolveResult(NamedTuple):
                         # device gathers must mask it, promotion makes it hot
 
 
+def tables_from_hits(owner: jax.Array, hit: jax.Array) -> jax.Array:
+    """Direct block tables from a stacked first-hit resolve.
+
+    ``owner``/``hit`` are the outputs of the fleet walk
+    (``kernels.chain_resolve``): the owning layer per page (-1 = miss)
+    and the owning layer's raw L2 word0. Returns int32 tables — the pool
+    row where found, -1 holes — the exact shape the paged-attention
+    plane consumes. Shared by the serving plane's table materialization
+    and the fused-attention oracle so the hole convention cannot drift.
+    """
+    ptr = (hit & jnp.uint32(fmt.PTR_MASK)).astype(jnp.int32)
+    return jnp.where(owner >= 0, ptr, -1)
+
+
 def resolve_vanilla_tables(l2: jax.Array, length: jax.Array,
                            page_ids: jax.Array) -> ResolveResult:
     """First-hit scan from the active volume down the chain. O(chain).

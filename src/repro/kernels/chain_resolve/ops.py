@@ -10,7 +10,6 @@ suite compares against).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.chain_resolve import ref
 from repro.kernels.chain_resolve.chain_resolve import (
@@ -19,18 +18,11 @@ from repro.kernels.chain_resolve.chain_resolve import (
     resolve_vanilla_fleet_pallas,
     resolve_vanilla_pallas,
 )
+from repro.kernels.common import pad_lanes as _pad_pages
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def _pad_pages(x, multiple=128):
-    n = x.shape[-1]
-    pad = (-n) % multiple
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    return x, n
 
 
 def resolve_vanilla(alloc, ptrs, length):

@@ -1,0 +1,33 @@
+"""Shared kernel-plane helpers.
+
+Every Pallas kernel in this package tiles its page axis over the TPU's
+128-wide lane dimension, so each ``ops`` wrapper needs the same
+pad-to-lane-multiple step before the ``pallas_call`` and the same
+un-pad slice after it. ``pad_lanes`` is that one helper; the per-kernel
+wrappers (``chain_resolve``, ``cow_gather``, ``paged_attention``) all
+share it instead of carrying private copies.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: TPU vector lane width — the tiling unit of every kernel's page axis.
+LANES = 128
+
+
+def pad_lanes(x, axis: int = -1, multiple: int = LANES):
+    """Zero-pad ``axis`` of ``x`` up to a multiple of ``multiple``.
+
+    Returns ``(padded, original_size)`` so callers can slice the kernel
+    output back to the caller-visible extent. Zero padding is safe for
+    every kernel here: a zero L2 word has ``FLAG_ALLOCATED`` unset (the
+    walk skips it), and padded pool/output lanes are sliced away.
+    """
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis % x.ndim] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n

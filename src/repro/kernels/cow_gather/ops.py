@@ -9,16 +9,14 @@ stays the independent oracle.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import pad_lanes
 from repro.kernels.cow_gather import ref
 from repro.kernels.cow_gather.cow_gather import gather_fleet_pallas, gather_pallas
 
 
 def _pad_pool(pool):
-    p = pool.shape[1]
-    pad = (-p) % 128
-    return (jnp.pad(pool, ((0, 0), (0, pad))) if pad else pool), p
+    return pad_lanes(pool, axis=1)
 
 
 def gather(pool, rows, found):

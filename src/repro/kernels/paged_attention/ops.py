@@ -1,11 +1,25 @@
-"""Jitted wrapper for paged decode attention (Pallas on TPU, ref on CPU)."""
+"""Jitted wrappers for paged decode attention.
+
+Hot-path policy (``docs/kernels.md``): the wrappers the serving engine's
+jitted decode step calls — ``paged_attention`` and ``fused_attention`` —
+dispatch the compiled Pallas kernel on TPU and the jnp oracle elsewhere
+(interpret mode inside a per-layer decode loop would be pure overhead).
+``fused_chain_attention`` is the *always-kernel* wrapper: compiled on
+TPU, interpret mode off-TPU, so CPU CI executes the exact fused kernel
+body — the same split ``chain_resolve`` makes between its single-chain
+and fleet wrappers.
+"""
 
 from __future__ import annotations
 
 import jax
 
+from repro.kernels.common import pad_lanes
 from repro.kernels.paged_attention import ref
-from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention.paged_attention import (
+    fused_chain_attention_pallas,
+    paged_attention_pallas,
+)
 
 
 def paged_attention(q, pool_k, pool_v, tables, lengths):
@@ -13,3 +27,29 @@ def paged_attention(q, pool_k, pool_v, tables, lengths):
         return paged_attention_pallas(q, pool_k, pool_v, tables, lengths,
                                       interpret=False)
     return ref.paged_attention_ref(q, pool_k, pool_v, tables, lengths)
+
+
+def fused_chain_attention(q, pool_k, pool_v, w0, chain_lengths, tenants,
+                          kv_lengths):
+    """Fused chain-resolve attention over the stacked (T, C, P) index.
+    Always the Pallas kernel (interpret off-TPU); pads the page axis to
+    a 128-lane multiple — padded lanes are unallocated words the walk
+    resolves to holes, so they never contribute."""
+    w0_p, _ = pad_lanes(w0)
+    return fused_chain_attention_pallas(
+        q, pool_k, pool_v, w0_p, chain_lengths, tenants, kv_lengths,
+        interpret=jax.default_backend() != "tpu")
+
+
+def fused_attention(q, pool_k, pool_v, w0, chain_lengths, tenants,
+                    kv_lengths):
+    """The decode hot path's fused dispatch: compiled kernel on TPU, the
+    composed oracle elsewhere. The caller guarantees a lane-aligned page
+    axis (``core.fleet.fused_layout_ok`` — the engine's auto-selection
+    rule), so no padding happens on the TPU path."""
+    if jax.default_backend() == "tpu":
+        return fused_chain_attention_pallas(
+            q, pool_k, pool_v, w0, chain_lengths, tenants, kv_lengths,
+            interpret=False)
+    return ref.fused_chain_attention_ref(
+        q, pool_k, pool_v, w0, chain_lengths, tenants, kv_lengths)

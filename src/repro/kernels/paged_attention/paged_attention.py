@@ -1,10 +1,22 @@
-"""Pallas TPU kernel: decode attention over a paged KV pool.
+"""Pallas TPU kernels: decode attention over a paged KV pool.
 
-The serving-side payoff of the paper's *direct access* principle: the
-block table handed to this kernel is the flattened (copy-forward) table,
-so each grid step DMAs exactly one physical KV block HBM→VMEM via the
-scalar-prefetched index map — no fork-chain walking anywhere near the
-attention inner loop.
+``paged_attention_pallas`` is the serving-side payoff of the paper's
+*direct access* principle: the block table handed to it is the flattened
+(copy-forward) table, so each grid step DMAs exactly one physical KV
+block HBM→VMEM via the scalar-prefetched index map — no fork-chain
+walking anywhere near the attention inner loop. It requires that table
+to have been materialized (resolved, synced, assembled, re-shipped) by
+the host first.
+
+``fused_chain_attention_pallas`` removes that materialization step: the
+kernel receives the *stacked fleet index itself* — the packed L2 word0
+stacks of ``core.fleet`` plus per-tenant chain lengths — and performs
+the first-hit chain walk of ``chain_resolve`` inside the attention grid,
+then DMAs each KV block straight out of the shared pool through the
+resolved row id. A tenant with ``max_chain == 1`` (the scalable/sQEMU
+format) degenerates to the O(1) active-layer direct lookup; deeper
+stacks pay the paper's O(chain) walk once per batch row, amortized over
+every page lane at once. See ``docs/kernels.md`` for the cost model.
 
 Grid: (batch, kv_blocks); the kv-block axis is innermost and sequential on
 a TPU core, so the online-softmax running state (m, l, acc) lives in VMEM
@@ -19,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import format as fmt
 
 
 def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, out_ref,
@@ -103,4 +117,151 @@ def paged_attention_pallas(q, pool_k, pool_v, tables, lengths, *,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
     )(safe_tables, lengths.astype(jnp.int32), q,
+      pool_k.reshape(nb, bs, hkv, d), pool_v.reshape(nb, bs, hkv, d))
+
+
+# -- fused chain-resolve attention -------------------------------------------
+
+
+def _fused_chain_attn_kernel(tenants_ref, chain_len_ref, kvlen_ref,
+                             q_ref, w0_ref, kp_ref, vp_ref, out_ref,
+                             rows_ref, m_ref, l_ref, acc_ref,
+                             k_buf, v_buf, sem_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+    c = w0_ref.shape[1]
+    p = w0_ref.shape[2]
+    bs, hkv, d = k_buf.shape
+    h = q_ref.shape[1]
+    g = h // hkv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # the fused chain walk: one vectorized first-hit scan over this
+        # batch row's tenant stack resolves every page lane at once and
+        # parks the pool rows in VMEM scratch for the whole kv sweep.
+        # C == 1 (scalable tenants) makes this the O(1) direct lookup.
+        length = chain_len_ref[tenants_ref[b]]
+        owner = jnp.full((1, p), -1, jnp.int32)
+        rows = jnp.zeros((1, p), jnp.int32)
+
+        def body(i, carry):
+            owner, rows = carry
+            # walk from the tenant's active volume (length-1) downwards
+            layer = length - 1 - i
+            valid = (layer >= 0) & (layer < c)
+            idx = jnp.maximum(layer, 0)
+            w = w0_ref[0, idx, :]
+            a = (w & jnp.uint32(fmt.FLAG_ALLOCATED)) != 0
+            first = a & valid & (owner[0] < 0)
+            owner = owner.at[0].set(jnp.where(first, layer, owner[0]))
+            rows = rows.at[0].set(jnp.where(
+                first, (w & jnp.uint32(fmt.PTR_MASK)).astype(jnp.int32),
+                rows[0]))
+            return owner, rows
+
+        owner, rows = jax.lax.fori_loop(0, c, body, (owner, rows))
+        rows_ref[...] = jnp.where(owner >= 0, rows, -1)
+
+    # this block's resolved pool row: a masked reduce over the parked walk
+    # result (VMEM has no dynamic scalar lane indexing)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
+    rows = rows_ref[...]
+    row = jnp.sum(jnp.where(lane == j, rows, 0))
+    hole = row < 0
+    row_safe = jnp.maximum(row, 0)
+
+    # KV pages come straight from the shared pool through the resolved
+    # row id — the pool stays in HBM (ANY) and each grid step DMAs one
+    # block; no host-materialized table anywhere on this path
+    ck = pltpu.make_async_copy(kp_ref.at[row_safe], k_buf, sem_ref.at[0])
+    cv = pltpu.make_async_copy(vp_ref.at[row_safe], v_buf, sem_ref.at[1])
+    ck.start()
+    cv.start()
+    ck.wait()
+    cv.wait()
+
+    kvlen = kvlen_ref[b]
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = (pos < kvlen) & jnp.logical_not(hole)      # (1,1,bs)
+
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, g, d)
+    k = k_buf[...].astype(jnp.float32)                 # (bs, Hkv, D)
+    v = v_buf[...].astype(jnp.float32)
+    scores = jnp.einsum("hgd,shd->hgs", q, k)          # (Hkv,G,bs)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(valid.reshape(1, 1, bs), scores, -jnp.inf)
+
+    m_prev = m_ref[...]                                # (Hkv,G,1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    pmat = jnp.where(jnp.isfinite(scores), jnp.exp(scores - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pmat, axis=-1, keepdims=True)
+    acc_ref[...] = (
+        acc_ref[...] * alpha
+        + jnp.einsum("hgs,shd->hgd", pmat, v)
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[...] = (acc_ref[...] / denom).reshape(1, h, d).astype(
+            out_ref.dtype
+        )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_chain_attention_pallas(q, pool_k, pool_v, w0, chain_lengths,
+                                 tenants, kv_lengths, *,
+                                 interpret: bool = True):
+    """Decode attention that walks the snapshot chain inside the kernel.
+
+    ``q``: (B, H, D); ``pool_k``/``pool_v``: (nb, bs, Hkv, D) shared KV
+    pool; ``w0``: (T, C, P) uint32 — the stacked fleet index's packed L2
+    word0 (``core.format`` layout), P a multiple of 128
+    (``ops.fused_chain_attention`` pads); ``chain_lengths``: (T,) int32
+    per-tenant chain length; ``tenants``: (B,) int32 batch-row → tenant
+    row; ``kv_lengths``: (B,) int32 tokens to attend over. Returns
+    (B, H, D) in q.dtype.
+
+    Unallocated pages (first-hit miss) contribute nothing; a batch row
+    whose tenant resolves no pages within ``kv_lengths`` outputs zeros.
+    """
+    b, h, d = q.shape
+    nb, bs, hkv, _ = pool_k.shape
+    t, c, p = w0.shape
+    g = h // hkv
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, j, tn, cl, kl: (b, 0, 0)),
+            pl.BlockSpec((1, c, p), lambda b, j, tn, cl, kl: (tn[b], 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, j, tn, cl, kl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, p), jnp.int32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+            pltpu.VMEM((bs, hkv, d), pool_k.dtype),
+            pltpu.VMEM((bs, hkv, d), pool_v.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        _fused_chain_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(tenants.astype(jnp.int32), chain_lengths.astype(jnp.int32),
+      kv_lengths.astype(jnp.int32), q, w0.astype(jnp.uint32),
       pool_k.reshape(nb, bs, hkv, d), pool_v.reshape(nb, bs, hkv, d))

@@ -1,8 +1,19 @@
-"""Pure-jnp oracle for paged decode attention (direct block tables)."""
+"""Pure-jnp oracles for paged decode attention.
+
+``paged_attention_ref`` consumes a pre-materialized direct block table;
+``fused_chain_attention_ref`` pins the fused kernel instead: it composes
+the stacked first-hit chain walk (``kernels.chain_resolve.ref``) with
+``paged_attention_ref``, so the fused kernel's in-grid walk + pool DMA
+is asserted against two already-pinned oracles rather than a third
+independent implementation.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core import resolve as resolve_lib
+from repro.kernels.chain_resolve import ref as chain_ref
 
 
 def paged_attention_ref(q, pool_k, pool_v, tables, lengths):
@@ -34,3 +45,25 @@ def paged_attention_ref(q, pool_k, pool_v, tables, lengths):
     probs = probs / jnp.maximum(jnp.sum(probs, -1, keepdims=True), 1e-30)
     out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def fused_tables_ref(w0, chain_lengths, tenants):
+    """Resolve the batch's direct block tables from the stacked index.
+
+    ``w0``: (T, C, P) uint32 packed L2 word0; ``chain_lengths``: (T,)
+    int32; ``tenants``: (B,) int32. Returns (B, P) int32 tables with -1
+    holes — only the batch's tenant rows are walked (O(B·C·P), matching
+    the fused kernel's grid, not the fleet-wide O(T·C·P) resolve).
+    """
+    owner, hit = chain_ref.resolve_vanilla_fleet_ref(
+        w0[tenants], chain_lengths[tenants])
+    return resolve_lib.tables_from_hits(owner, hit)
+
+
+def fused_chain_attention_ref(q, pool_k, pool_v, w0, chain_lengths,
+                              tenants, kv_lengths):
+    """Oracle for the fused kernel: the pinned chain-walk oracle feeds
+    the pinned table-consuming attention oracle. Same signature contract
+    as ``fused_chain_attention_pallas``; returns (B, H, D) in q.dtype."""
+    tables = fused_tables_ref(w0, chain_lengths, tenants)
+    return paged_attention_ref(q, pool_k, pool_v, tables, kv_lengths)

@@ -31,6 +31,15 @@ by a node is propagated to each tenant stack holding a copy of its layer
 (the ``_occupants`` registry) — so the stacked index always resolves
 bit-identically to the live parent-pointer walk.
 
+**Fused decode path.** On lane-aligned pools the engine skips table
+materialization entirely: ``prepare_step_fused`` derives the COW-prepare
+decisions from a *narrow* resolve of just the batch's write columns and
+returns a ``FusedStepPlan`` — the stacked index words, per-tenant chain
+lengths and three (N,) vectors — that the fused attention kernel
+(``kernels/paged_attention``) consumes directly, walking the chain
+inside the decode grid. ``prepare_step`` remains the fallback for
+non-lane-aligned pools and the oracle the fused path is tested against.
+
 Host-side state survives as (a) the refcount/tombstone lifecycle (the
 block allocator and ``free_seq`` contract are unchanged) and (b) the
 numpy resolver ``_resolve_oracle`` — retained purely as the test oracle
@@ -61,7 +70,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +78,23 @@ import numpy as np
 
 from repro.core import fleet as fleet_lib
 from repro.core import format as fmt
+
+
+class FusedStepPlan(NamedTuple):
+    """Device inputs for one fused decode step (``prepare_step_fused``).
+
+    The fused attention kernel walks the stacked fleet index itself, so
+    instead of a materialized (N, max_blocks) table the step ships the
+    index *references* plus three (N,) host-assembled vectors — the only
+    per-step host→device traffic on this path.
+    """
+
+    l2: jax.Array             # (T, C, P, 2) uint32 — the stacked index,
+                              # already device-resident (no transfer)
+    chain_lengths: jax.Array  # (T,) int32 per-tenant chain length (device)
+    tenants: jax.Array        # (N,) int32 batch row → tenant row
+    lengths: jax.Array        # (N,) int32 pre-advance sequence lengths
+    write_blocks: jax.Array   # (N,) int32 COW-prepared in-step write target
 
 
 @dataclasses.dataclass(frozen=True)
@@ -509,28 +535,33 @@ class PagedKVCache:
         return b
 
     def _patch(self, tables: np.ndarray, owners: np.ndarray, seq: _Seq,
-               blk: int, nb: int, row_map: dict | None) -> None:
+               blk: int, nb: int, row_map: dict | None,
+               col_map: dict | None = None) -> None:
         """Mirror one stamp into the host copy of the resolve maps, so
         later sequences in the same batch observe it exactly as the
         sequential host path did (first-hit: a layer wins iff no layer
         above it in that tenant's stack owns the page). ``row_map`` maps
         tenant ids to rows of ``tables``/``owners`` (None: identity over
         the full fleet); tenants outside the map have no host row in
-        this call and their device stamp alone suffices."""
+        this call and their device stamp alone suffices. ``col_map``
+        likewise maps logical block indexes to columns (None: identity)
+        — the fused step's narrow resolve carries only the batch's write
+        columns, not all ``max_blocks_per_seq`` of them."""
         def row(t: int):
             return t if row_map is None else row_map.get(t)
 
+        col = blk if col_map is None else col_map[blk]
         if self.scalable:
             r = row(seq.tenant)
             if r is not None:
-                tables[r, blk] = nb
-                owners[r, blk] = seq.sid
+                tables[r, col] = nb
+                owners[r, col] = seq.sid
             return
         for t, layer in self._occupants[seq.sid]:
             r = row(t)
-            if r is not None and owners[r, blk] <= layer:
-                tables[r, blk] = nb
-                owners[r, blk] = layer
+            if r is not None and owners[r, col] <= layer:
+                tables[r, col] = nb
+                owners[r, col] = layer
 
     def _copy_blocks(self, src: list[int], dst: list[int]) -> None:
         """Batched COW data movement with *sequential* semantics.
@@ -566,16 +597,19 @@ class PagedKVCache:
     def _prepare_block(self, seq: _Seq, blk: int, tables: np.ndarray,
                        owners: np.ndarray, row_map: dict | None,
                        writes: list, cow_src: list, cow_dst: list, *,
+                       col_map: dict | None = None,
                        copy_data: bool = True) -> None:
         """The COW-prepare protocol for ONE (sequence, block) site: fresh
         alloc / COW with refcount release / owned no-op, plus the stamp
         bookkeeping and host-map patch. ``copy_data=False`` skips queueing
         the data copy of a COW (bulk prefill of a fully-covered block
-        overwrites every visible slot anyway). The single place the
-        alloc/COW/refcount invariants live — shared by ``prepare_step``,
-        ``prepare_write`` and ``append_prefill``."""
+        overwrites every visible slot anyway). ``row_map``/``col_map``:
+        as in ``_patch``. The single place the alloc/COW/refcount
+        invariants live — shared by ``prepare_step``,
+        ``prepare_step_fused``, ``prepare_write`` and ``append_prefill``."""
         row = seq.tenant if row_map is None else row_map[seq.tenant]
-        cur = int(tables[row, blk])
+        col = blk if col_map is None else col_map[blk]
+        cur = int(tables[row, col])
         owns = seq.table[blk] >= 0 and seq.owner[blk] in (-1, seq.sid)
         if cur < 0:
             nb = self._alloc(seq)
@@ -595,18 +629,19 @@ class PagedKVCache:
             nb = int(seq.table[blk])
         if nb != cur:
             writes.append((seq.sid, blk, nb))
-            self._patch(tables, owners, seq, blk, nb, row_map)
+            self._patch(tables, owners, seq, blk, nb, row_map, col_map)
         seq.table[blk] = nb
         seq.owner[blk] = seq.sid
 
     def _prepare_against(self, sids, tables: np.ndarray, owners: np.ndarray,
-                         row_map: dict | None = None
+                         row_map: dict | None = None,
+                         col_map: dict | None = None
                          ) -> list[tuple[int, int, int]]:
         """COW-prepare the next-token slot of every sid against the synced
         resolve maps. Mutates mirrors/refcounts, patches the maps in
         place, batches the COW data copies, and returns the stamp list
-        ``[(sid, blk, new_block)]`` for ``_stamp_fleet``. ``row_map``: as
-        in ``_patch``."""
+        ``[(sid, blk, new_block)]`` for ``_stamp_fleet``.
+        ``row_map``/``col_map``: as in ``_patch``."""
         bs = self.cfg.block_size
         writes: list[tuple[int, int, int]] = []
         cow_src: list[int] = []
@@ -617,7 +652,7 @@ class PagedKVCache:
             if blk >= self.cfg.max_blocks_per_seq:
                 raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
             self._prepare_block(seq, blk, tables, owners, row_map,
-                                writes, cow_src, cow_dst)
+                                writes, cow_src, cow_dst, col_map=col_map)
         self._copy_blocks(cow_src, cow_dst)
         return writes
 
@@ -703,6 +738,81 @@ class PagedKVCache:
         writes = self._prepare_against(sids, tables, owners)
         self._stamp_fleet(writes)
         return self._assemble(sids, tables, pad_to, pad_block)
+
+    def prepare_step_fused(self, sids, *, pad_to: int = 0,
+                           pad_block: int | None = None) -> FusedStepPlan:
+        """COW-prepare for one decode step *without* materializing block
+        tables — the fused-attention counterpart of ``prepare_step``.
+
+        The attention tables never exist on this path: the fused kernel
+        (``kernels.paged_attention.fused_chain_attention``) walks the
+        stacked index on-device, so the host only needs the resolve at
+        the batch's **write columns** to drive the COW-prepare protocol.
+        That narrow resolve — O(T·C·K) for K distinct columns instead of
+        ``_resolve_all``'s O(T·C·P) — is this path's ONE designed sync
+        per decode step (it *replaces* the full-table sync, see
+        docs/invariants.md). Cold blocks of involved sequences are still
+        promoted first, exactly as on the tables path.
+
+        Padded rows (up to ``pad_to``) get tenant 0 with length 0 — the
+        kernel masks every position — and scatter their in-step K/V
+        write into the reserved ``pad_block``. ``lookup_count`` is
+        charged from the host mirrors for scalable rows and parentless
+        roots (bit-identical to the tables path) and with the narrow
+        resolve's actual consultations for walked forks — the fused
+        path's cost model (docs/kernels.md).
+        """
+        self._check_pad(len(sids), pad_to, pad_block)
+        self._promote_cold(sids)
+        bs = self.cfg.block_size
+        cols = sorted({self._live_seq(sid).length // bs for sid in sids})
+        # pad the column batch to the step's batch bucket, not to the
+        # distinct-column count: that count flips as sequences cross
+        # block boundaries, and a shape flip would retrace the narrow
+        # resolve mid-serving
+        k = 1
+        while k < max(len(cols), pad_to):
+            k *= 2
+        ids = np.zeros(k, np.int32)
+        ids[:len(cols)] = cols
+        grid = jnp.broadcast_to(jnp.asarray(ids)[None],
+                                (self.fleet.spec.n_tenants, k))
+        # the fused path's ONE designed sync per step: the narrow
+        # write-column resolve REPLACES _resolve_all's full-table sync
+        # (docs/invariants.md) — the COW-prepare protocol needs it host-side
+        out = np.array(_fleet_tables(self.fleet, grid,  # fleetlint: disable=FL002
+                                     self.resolver))
+        tables, owners, lookups = out[0], out[1], out[2]
+        col_map = {c: i for i, c in enumerate(cols)}
+        for sid in sids:
+            seq = self._seqs[sid]
+            if self.scalable or seq.parent is None:
+                # the host mirror IS the resolved table here — identical
+                # accounting to the tables path's _count_lookups
+                self.lookup_count += int(np.sum(seq.table >= 0)) or 1
+            else:
+                self.lookup_count += int(
+                    lookups[seq.tenant, col_map[seq.length // bs]])
+        writes = self._prepare_against(sids, tables, owners,
+                                       col_map=col_map)
+        self._stamp_fleet(writes)
+        n = max(len(sids), pad_to)
+        tenants = np.zeros(n, np.int32)
+        lengths = np.zeros(n, np.int32)
+        wblocks = np.full(n, pad_block if pad_block is not None else 0,
+                          np.int32)
+        for i, sid in enumerate(sids):
+            seq = self._seqs[sid]
+            tenants[i] = seq.tenant
+            lengths[i] = seq.length
+            wblocks[i] = seq.table[seq.length // bs]
+        return FusedStepPlan(
+            l2=self.fleet.l2,
+            chain_lengths=self.fleet.length,
+            tenants=jnp.asarray(tenants),
+            lengths=jnp.asarray(lengths),
+            write_blocks=jnp.asarray(wblocks),
+        )
 
     def commit_pools(self, pool_k: jax.Array, pool_v: jax.Array) -> None:
         """Adopt the KV pools returned by an external decode step's

@@ -11,11 +11,22 @@ sequence through ``paged_decode_step``; ``finish_request`` releases a
 sequence's blocks back to the pool (tombstoned while forks are live) and
 retires its fleet tenant row (``fleet.free_tenant``).
 
-``step()`` performs **zero per-sequence host-side chain walks**: the
-COW-prepare mask and the attention block tables both come from ONE
-stacked fleet resolve (``PagedKVCache.prepare_step``) — the Pallas kernel
-plane on lane-aligned pools, the vmapped gather otherwise — and the
-stacked tables ship to the device in one transfer per step.
+``step()`` performs **zero per-sequence host-side chain walks**. Two
+decode paths exist (``decode_path`` ctor arg, default ``"auto"``):
+
+- ``"tables"`` — the COW-prepare mask and the attention block tables
+  both come from ONE stacked fleet resolve (``PagedKVCache.prepare_step``)
+  — the Pallas kernel plane on lane-aligned pools, the vmapped gather
+  otherwise — and the stacked tables ship to the device in one transfer
+  per step.
+- ``"fused"`` — no padded block tables are materialized at all: a
+  *narrow* resolve (``PagedKVCache.prepare_step_fused``, only the
+  batch's write columns) stamps the COW slots, then
+  ``paged_decode_step_fused`` reads K/V straight through the packed
+  (T, C, P) fleet index — the chain walk happens inside the attention
+  plane (``kernels/paged_attention``). Auto-selected iff the page axis
+  is lane-aligned (``core.fleet.fused_layout_ok``); see
+  ``docs/kernels.md`` for the cost model.
 
 The engine can also drive a fleet maintenance plane: pass a
 ``core.scheduler.MaintenanceScheduler`` and each decode step ends with one
@@ -39,19 +50,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import fleet as fleet_lib
 from repro.kvcache.paged import PagedKVCache, PagedKVConfig
 from repro.models import layers as L
 from repro.models.api import get_model
-from repro.serve.paged_decode import paged_decode_step
+from repro.serve.paged_decode import paged_decode_step, paged_decode_step_fused
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, scalable: bool = True,
                  n_blocks: int = 512, block_size: int = 16,
                  max_blocks_per_seq: int = 64, scheduler=None,
-                 resolver: str = "auto"):
+                 resolver: str = "auto", decode_path: str = "auto"):
         if cfg.family not in ("dense", "moe"):
             raise ValueError("paged serving engine supports attention LMs")
+        if decode_path not in ("auto", "fused", "tables"):
+            raise ValueError(f"unknown decode_path {decode_path!r}")
+        if decode_path == "auto":
+            decode_path = ("fused"
+                           if fleet_lib.fused_layout_ok(max_blocks_per_seq)
+                           else "tables")
+        elif decode_path == "fused" and not fleet_lib.fused_layout_ok(
+                max_blocks_per_seq):
+            raise ValueError(
+                "decode_path='fused' needs a lane-aligned page axis "
+                f"(max_blocks_per_seq % 128 == 0, got {max_blocks_per_seq})"
+            )
+        self.decode_path = decode_path
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -180,18 +205,33 @@ class Engine:
             self._maintain()
             return {}
         pad_to = self._bucket(len(sids))
-        # ONE stacked fleet resolve serves both the COW-prepare mask (the
-        # slots the decode step's in-place scatter will hit) and the
-        # attention block tables; the sids→tenant-rows mapping ships once.
-        tables, lengths = self.kv.prepare_step(
-            sids, pad_to=pad_to, pad_block=self._pad_block
-        )
         tok_col = np.zeros((pad_to, 1), np.int32)
         tok_col[: len(sids), 0] = [self.active[s][-1] for s in sids]
-        logits, pk, pv = paged_decode_step(
-            self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
-            tables, lengths, jnp.asarray(tok_col),
-        )
+        if self.decode_path == "fused":
+            # No table materialization: the narrow COW-prepare resolve
+            # stamps this step's write slots, then the decode step reads
+            # K/V straight through the stacked fleet index (the chain
+            # walk runs inside the attention plane).
+            plan = self.kv.prepare_step_fused(
+                sids, pad_to=pad_to, pad_block=self._pad_block
+            )
+            logits, pk, pv = paged_decode_step_fused(
+                self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
+                plan.l2, plan.chain_lengths, plan.tenants, plan.lengths,
+                plan.write_blocks, jnp.asarray(tok_col),
+            )
+        else:
+            # ONE stacked fleet resolve serves both the COW-prepare mask
+            # (the slots the decode step's in-place scatter will hit) and
+            # the attention block tables; the sids→tenant-rows mapping
+            # ships once.
+            tables, lengths = self.kv.prepare_step(
+                sids, pad_to=pad_to, pad_block=self._pad_block
+            )
+            logits, pk, pv = paged_decode_step(
+                self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
+                tables, lengths, jnp.asarray(tok_col),
+            )
         self.kv.commit_pools(pk, pv)
         out = {}
         # the sampling boundary: greedy argmax must reach the host to

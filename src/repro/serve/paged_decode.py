@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention import ref as pa_ref
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models.transformer import output_matrix
@@ -58,6 +59,72 @@ def paged_decode_step(cfg: ModelConfig, params, pool_k, pool_v, tables,
         attn = pa_ops.paged_attention(
             q[:, 0].astype(L.COMPUTE_DTYPE), pk, pv, tables, lengths + 1
         )
+        x = x + attn.reshape(b, 1, -1).astype(x.dtype) @ p["attn"]["wo"].astype(x.dtype)
+        h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff, _ = moe_lib.moe_apply(cfg, p["ff"], h2)
+        else:
+            ff = L.mlp_apply(p["ff"], h2, cfg.activation)
+        return x + ff, (pk, pv)
+
+    x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ output_matrix(cfg, params).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, pk, pv
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def paged_decode_step_fused(cfg: ModelConfig, params, pool_k, pool_v, l2,
+                            chain_lengths, tenants, lengths, write_blocks,
+                            tokens):
+    """One decode step reading K/V *through the stacked fleet index*.
+
+    The fused counterpart of ``paged_decode_step``: no block tables are
+    materialized anywhere — the attention plane receives the packed L2
+    word0 stacks (``l2[..., 0]``), per-tenant ``chain_lengths`` and the
+    batch's ``tenants`` mapping, and resolves each KV block by walking
+    the chain in-grid (``kernels/paged_attention``). The in-step K/V
+    scatter lands in ``write_blocks`` — the COW-prepared slots
+    ``PagedKVCache.prepare_step_fused`` stamped into the index before
+    this jit, so the walk resolves the write block too.
+
+    Backend split (hot-path policy, ``docs/kernels.md``): on TPU every
+    layer runs the compiled fused kernel; elsewhere the batch's tables
+    are resolved ONCE inside this jit by the pinned walk oracle and the
+    table-consuming oracle serves every layer — still zero host-side
+    materialization, transfer or sync.
+
+    pool_k/pool_v: (L, nb, bs, Hkv, D); l2: (T, C, P, 2) uint32;
+    chain_lengths: (T,); tenants/lengths/write_blocks: (B,) int32;
+    tokens: (B, 1) int32. Returns (logits (B, V), new_pool_k, new_pool_v).
+    """
+    b = tokens.shape[0]
+    bs = pool_k.shape[2]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]      # (B,1,d)
+    positions = lengths[:, None]                             # (B,1)
+    w0 = l2[..., 0]
+    off = lengths % bs
+    on_tpu = jax.default_backend() == "tpu"
+    if not on_tpu:
+        tables = pa_ref.fused_tables_ref(w0, chain_lengths, tenants)
+
+    def body(x, inputs):
+        p, pk, pv = inputs
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, positions, rope_theta=cfg.rope_theta,
+                             use_rope=cfg.use_rope)
+        pk = pk.at[write_blocks, off].set(k[:, 0].astype(pk.dtype))
+        pv = pv.at[write_blocks, off].set(v[:, 0].astype(pv.dtype))
+        qh = q[:, 0].astype(L.COMPUTE_DTYPE)
+        if on_tpu:
+            attn = pa_ops.fused_attention(qh, pk, pv, w0, chain_lengths,
+                                          tenants, lengths + 1)
+        else:
+            attn = pa_ref.paged_attention_ref(qh, pk, pv, tables,
+                                              lengths + 1)
         x = x + attn.reshape(b, 1, -1).astype(x.dtype) @ p["attn"]["wo"].astype(x.dtype)
         h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
         if cfg.is_moe:

@@ -12,8 +12,10 @@ from repro.kernels.chain_resolve.chain_resolve import (
     resolve_vanilla_fleet_pallas, resolve_vanilla_pallas)
 from repro.kernels.cow_gather import ref as cg_ref
 from repro.kernels.cow_gather.cow_gather import gather_fleet_pallas, gather_pallas
+from repro.kernels.paged_attention import ops as pa_ops
 from repro.kernels.paged_attention import ref as pa_ref
-from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention.paged_attention import (
+    fused_chain_attention_pallas, paged_attention_pallas)
 from repro.kernels.stream_merge import ref as sm_ref
 from repro.kernels.stream_merge.stream_merge import merge_pallas
 
@@ -127,6 +129,80 @@ def test_paged_attention_sweep(dtype, tol, h, hkv, d, bs, m):
         np.asarray(o1, np.float32), np.asarray(o2, np.float32),
         rtol=tol, atol=tol,
     )
+
+
+def _fused_attn_case(key, t, c, p, b, nb, bs, h, hkv, d, dtype,
+                     density=0.55):
+    """A random fused-attention problem: a packed (T, C, P) index whose
+    ptrs address a real KV pool, ragged chain lengths, a batch drawn
+    from a subset of tenants (repeats allowed, some tenants inactive),
+    and ragged kv lengths."""
+    ks = [jax.random.fold_in(key, i) for i in range(9)]
+    w0 = fmt.pack_entry(
+        jax.random.randint(ks[0], (t, c, p), 0, nb).astype(jnp.uint32),
+        jax.random.randint(ks[1], (t, c, p), 0, c).astype(jnp.uint32),
+        allocated=jax.random.uniform(ks[2], (t, c, p)) < density,
+        bfi_valid=jax.random.uniform(ks[3], (t, c, p)) < 0.7,
+        zero=jax.random.uniform(ks[4], (t, c, p)) < 0.1,
+    )[..., 0]
+    chain_lengths = jax.random.randint(ks[5], (t,), 1, c + 1)
+    tenants = jax.random.randint(ks[6], (b,), 0, t)
+    kv_lengths = jax.random.randint(ks[7], (b,), 1, p * bs + 1)
+    q = jax.random.normal(ks[8], (b, h, d)).astype(dtype)
+    pk = jax.random.normal(ks[0], (nb, bs, hkv, d)).astype(dtype)
+    pv = jax.random.normal(ks[1], (nb, bs, hkv, d)).astype(dtype)
+    return q, pk, pv, w0, chain_lengths, tenants, kv_lengths
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("t,c,p,h,hkv,d,bs", [
+    (4, 6, 128, 8, 2, 64, 8),     # GQA 4:1, multi-layer chains
+    (3, 1, 128, 4, 4, 32, 4),     # MHA, C=1: direct-path degeneration
+    (5, 9, 256, 16, 1, 64, 8),    # MQA, two lane tiles
+])
+def test_fused_chain_attention_sweep(dtype, tol, t, c, p, h, hkv, d, bs):
+    b, nb = 3, 32
+    key = jax.random.fold_in(KEY, t * c * p + h)
+    q, pk, pv, w0, cl, tn, kl = _fused_attn_case(
+        key, t, c, p, b, nb, bs, h, hkv, d, dtype)
+    o1 = pa_ref.fused_chain_attention_ref(q, pk, pv, w0, cl, tn, kl)
+    o2 = fused_chain_attention_pallas(q, pk, pv, w0, cl, tn, kl,
+                                      interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_fused_chain_attention_all_masked_row():
+    """A batch row whose entire chain misses (nothing allocated below its
+    length) must come out all-zero from kernel and oracle alike."""
+    t, c, p, b, nb, bs, h, hkv, d = 2, 3, 128, 2, 16, 4, 4, 2, 32
+    q, pk, pv, w0, cl, tn, kl = _fused_attn_case(
+        jax.random.fold_in(KEY, 77), t, c, p, b, nb, bs, h, hkv, d,
+        jnp.float32)
+    w0 = w0.at[1].set(0)          # tenant 1 owns nothing anywhere
+    tn = jnp.array([0, 1], jnp.int32)
+    o1 = pa_ref.fused_chain_attention_ref(q, pk, pv, w0, cl, tn, kl)
+    o2 = fused_chain_attention_pallas(q, pk, pv, w0, cl, tn, kl,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(o2[1]), 0.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_chain_attention_wrapper_pads_nonaligned_pages():
+    """The always-kernel wrapper pads a non-lane-aligned page axis; the
+    padded lanes are unallocated words the walk resolves to holes, so
+    outputs match the unpadded oracle exactly."""
+    t, c, p, b, nb, bs, h, hkv, d = 2, 3, 40, 2, 16, 4, 4, 2, 32
+    q, pk, pv, w0, cl, tn, kl = _fused_attn_case(
+        jax.random.fold_in(KEY, 40), t, c, p, b, nb, bs, h, hkv, d,
+        jnp.float32)
+    o1 = pa_ref.fused_chain_attention_ref(q, pk, pv, w0, cl, tn, kl)
+    o2 = pa_ops.fused_chain_attention(q, pk, pv, w0, cl, tn, kl)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("k,n", [(2, 128), (8, 256), (30, 640)])

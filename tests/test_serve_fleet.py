@@ -327,3 +327,115 @@ def test_scalable_sids_past_bfi_width_keep_serving():
     assert float(ck[0, 6, 0, 0]) == 9.0
     pk, _ = cache.gather(sid)
     assert pk.shape[1] == 6
+
+
+def _mk_engines(cfg, params, scalable):
+    """A tables-path and a fused-path engine built identically."""
+    from repro.serve.engine import Engine
+
+    mk = lambda path: Engine(cfg, params, scalable=scalable, n_blocks=256,
+                             block_size=4, max_blocks_per_seq=128,
+                             resolver="gather", decode_path=path)
+    return mk("tables"), mk("fused")
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_fused_decode_path_matches_tables_path(scalable):
+    """Tentpole parity: a full engine decode loop — fork propagation
+    mid-loop, park/demote → resume with the cold promote-before-step —
+    must emit identical tokens, identical KV bytes and identical
+    allocation on the fused path and the tables path. (lookup_count is
+    NOT compared: the two paths have different documented cost models.)
+    """
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import get_model
+
+    cfg = smoke_config("qwen2-7b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    eng_t, eng_f = _mk_engines(cfg, params, scalable)
+    assert eng_t.decode_path == "tables" and eng_f.decode_path == "fused"
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (5, 9, 3)]
+    sids_t = [eng_t.add_request(p) for p in prompts]
+    sids_f = [eng_f.add_request(p) for p in prompts]
+    for _ in range(6):
+        assert eng_t.step() == eng_f.step()
+    eng_t.fork_request(sids_t[1])          # fork propagation mid-loop
+    eng_f.fork_request(sids_f[1])
+    for _ in range(4):
+        assert eng_t.step() == eng_f.step()
+    spilled_t = eng_t.park_request(sids_t[0])   # host-tier spill
+    spilled_f = eng_f.park_request(sids_f[0])
+    assert spilled_t == spilled_f
+    for _ in range(2):
+        assert eng_t.step() == eng_f.step()
+    eng_t.resume_request(sids_t[0])        # lazy: next step promotes
+    eng_f.resume_request(sids_f[0])
+    for _ in range(3):
+        assert eng_t.step() == eng_f.step()
+    for st, sf in zip(sids_t, sids_f):
+        kt, vt = eng_t.kv.gather(st)
+        kf, vf = eng_f.kv.gather(sf)
+        np.testing.assert_array_equal(np.asarray(kt), np.asarray(kf))
+        np.testing.assert_array_equal(np.asarray(vt), np.asarray(vf))
+    assert eng_t.kv.blocks_in_use() == eng_f.kv.blocks_in_use()
+    assert eng_t.kv.host_blocks_in_use() == eng_f.kv.host_blocks_in_use()
+
+
+def test_fused_decode_path_auto_selection():
+    """``decode_path="auto"`` picks fused iff the page axis is
+    lane-aligned (``fused_layout_ok``); an explicit fused request on a
+    non-aligned pool is a configuration error."""
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.serve.engine import Engine
+
+    cfg = smoke_config("qwen2-7b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    mk = lambda mbs, path: Engine(cfg, params, scalable=False, n_blocks=64,
+                                  block_size=4, max_blocks_per_seq=mbs,
+                                  decode_path=path)
+    assert fleet_lib.fused_layout_ok(128)
+    assert not fleet_lib.fused_layout_ok(64)
+    assert mk(128, "auto").decode_path == "fused"
+    assert mk(64, "auto").decode_path == "tables"
+    assert mk(64, "tables").decode_path == "tables"
+    with pytest.raises(ValueError, match="lane-aligned"):
+        mk(64, "fused")
+    with pytest.raises(ValueError, match="decode_path"):
+        mk(128, "sideways")
+
+
+@pytest.mark.parametrize("scalable", [True, False])
+def test_prepare_step_fused_plan_matches_tables(scalable):
+    """On a settled cache the tables derived from a ``FusedStepPlan``
+    (walk oracle over the plan's index) must be bit-identical to
+    ``prepare_step``'s materialized tables, and the plan's write blocks
+    must be the slots those tables hold at each write column."""
+    from repro.kernels.paged_attention import ref as pa_ref
+
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=4, block_size=4,
+                        n_blocks=512, max_blocks_per_seq=128,
+                        dtype=jnp.float32)
+    cache = PagedKVCache(cfg, scalable=scalable)
+    sid = cache.new_seq()
+    cache.append_prefill(sid, prompt(6), prompt(6))
+    a = cache.fork(sid)
+    cache.append(a, tok(2.0), tok(2.0))
+    b = cache.fork(a)
+    cache.append(b, tok(3.0), tok(3.0))
+    sids = sorted({sid, a, b})
+    tables, lengths = cache.prepare_step(sids)         # settles the slots
+    plan = cache.prepare_step_fused(sids)
+    derived = np.asarray(pa_ref.fused_tables_ref(
+        plan.l2[..., 0], plan.chain_lengths, plan.tenants))
+    np.testing.assert_array_equal(derived, np.asarray(tables))
+    np.testing.assert_array_equal(np.asarray(plan.lengths),
+                                  np.asarray(lengths))
+    for i, s in enumerate(sids):
+        col = int(plan.lengths[i]) // cfg.block_size
+        assert int(plan.write_blocks[i]) == int(derived[i, col])

@@ -4,7 +4,7 @@
 
 Checks, per artifact: the ``benchmark``/``results`` envelope, the
 per-record required keys for that benchmark (section-discriminated for
-``fleet``, mode-discriminated for ``tiering``), the bit-verified flag
+``fleet`` and ``serve``, mode-discriminated for ``tiering``), the bit-verified flag
 where the schema defines one (``serve``, ``tiering``, ``migration`` —
 it must be present *and* truthy: capacity/speedup numbers from dropped data are
 worse than no numbers), and that no NaN/Inf leaked anywhere in the
@@ -30,8 +30,12 @@ FLEET_SECTIONS = {
 MAINTENANCE_KEYS = {"mode", "tenants", "chain", "k", "ticks",
                     "worst_tick_ms", "mean_tick_ms", "p50_tick_ms",
                     "quanta_reclaimed", "final_mean_chain"}
-SERVE_KEYS = {"section", "format", "depth", "batch", "resolver",
-              "host_us", "fleet_us", "speedup", "verified"}
+SERVE_SECTIONS = {
+    "serve_step": {"section", "format", "depth", "batch", "resolver",
+                   "host_us", "fleet_us", "speedup", "verified"},
+    "decode": {"section", "format", "depth", "batch", "resolver",
+               "tables_us", "fused_us", "speedup", "verified"},
+}
 TIERING_KEYS = {"mode", "depth", "tenants_live", "pool_rows", "page_size",
                 "worst_tick_ms", "mean_tick_ms", "ticks", "rows_demoted",
                 "rows_promoted", "host_rows", "stw_demote_ms", "verified"}
@@ -67,7 +71,10 @@ def _record_keys(benchmark: str, rec: dict) -> set[str] | None:
     if benchmark == "maintenance":
         return MAINTENANCE_KEYS
     if benchmark == "serve":
-        return SERVE_KEYS
+        section = rec.get("section")
+        if section not in SERVE_SECTIONS:
+            return {"section"}  # forces a "missing/unknown section" error
+        return SERVE_SECTIONS[section]
     if benchmark == "tiering":
         return (TIERING_TIERED_KEYS if rec.get("mode") == "tiered"
                 else TIERING_KEYS)
