@@ -38,7 +38,8 @@ class LintConfig:
         {"pool", "pool_k", "pool_v", "l1", "l2"})
     # FL004: modules that own pool/free-list/lease state
     fl004_owner_modules: tuple[str, ...] = (
-        "core/fleet.py", "core/chain.py", "core/store.py", "kvcache/paged.py")
+        "core/fleet.py", "core/chain.py", "core/store.py", "core/golden.py",
+        "kvcache/paged.py")
     fl004_protected_attrs: frozenset[str] = frozenset(
         {"pool", "pool_k", "pool_v", "l1", "l2", "_free", "_free_tenants",
          "_data", "lease_owner", "lease_index", "lease_count"})

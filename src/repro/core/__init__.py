@@ -13,6 +13,7 @@ from repro.core.resolve import (  # noqa: F401
     resolve_direct,
     resolve_vanilla,
 )
-from repro.core import cache, fleet, metrics, scheduler, store  # noqa: F401
+from repro.core import cache, fleet, golden, metrics, scheduler, store  # noqa: F401
 from repro.core.fleet import ChainFleet, FleetSpec  # noqa: F401
+from repro.core.golden import GoldenRegistry, PrefixTrie  # noqa: F401
 from repro.core.scheduler import MaintenanceScheduler  # noqa: F401

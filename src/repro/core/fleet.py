@@ -476,7 +476,8 @@ def _tenant_sel(n_tenants: int, tenants) -> np.ndarray:
     return sel
 
 
-def free_tenant(fleet: ChainFleet, tenants, *, store=None) -> ChainFleet:
+def free_tenant(fleet: ChainFleet, tenants, *, store=None,
+                registry=None) -> ChainFleet:
     """Retire tenants wholesale: reset their chains and return each one's
     *entire* lease set to the allocator free list in one call.
 
@@ -494,6 +495,11 @@ def free_tenant(fleet: ChainFleet, tenants, *, store=None) -> ChainFleet:
             tenants. Their host rows are returned to the store's free
             list here — a freed tenant must leave no orphaned host pages.
             Required iff a selected tenant holds cold rows.
+        registry: the ``GoldenRegistry``, when the fleet runs one.
+            Freeing a registered golden *owner* is refused (live or not,
+            its rows may be pinned — ``unregister`` first); freeing a
+            golden *fork* releases its pins on the shared base here, so
+            callers cannot leak refcounts.
 
     Returns:
         The updated ``ChainFleet``. Pool rows formerly referenced by the
@@ -505,6 +511,16 @@ def free_tenant(fleet: ChainFleet, tenants, *, store=None) -> ChainFleet:
     idx = np.flatnonzero(sel)
     if idx.size == 0:
         return fleet
+    if registry is not None:
+        owners = [int(t) for t in idx if registry.is_golden_owner(int(t))]
+        if owners:
+            raise ValueError(
+                f"tenants {owners} are registered golden bases; "
+                "unregister them before freeing (forks may pin their rows)"
+            )
+        for t in idx:
+            if registry.is_fork(int(t)):
+                registry.release(int(t))
     cold_held = np.asarray(fleet.cold_count)[idx]
     if np.any(cold_held > 0):
         if store is None:
@@ -546,18 +562,46 @@ def free_tenant(fleet: ChainFleet, tenants, *, store=None) -> ChainFleet:
 
 
 def attach_tenant(fleet: ChainFleet, t: int, *,
-                  scalable: bool | None = None) -> ChainFleet:
+                  scalable: bool | None = None,
+                  registry=None) -> ChainFleet:
     """(Re)initialize tenant slot ``t`` for a new occupant: a fresh empty
     length-1 chain with the given format flag (default: keep the slot's
     current flag). Any leases the slot still held are released first
-    (``free_tenant``), so reused slots can never leak a predecessor's
-    rows or tables."""
-    out = free_tenant(fleet, t)
+    (``free_tenant``, honouring ``registry`` pins), so reused slots can
+    never leak a predecessor's rows or tables."""
+    out = free_tenant(fleet, t, registry=registry)
     if scalable is None:
         return out
     return dataclasses.replace(
         out, scalable=out.scalable.at[t].set(bool(scalable))
     )
+
+
+@partial(jax.jit, static_argnames=("bump",))
+def _clone_rows(l1, l2, length, scalable, src, dst, *, bump: bool = False):
+    # src/dst arrive TRACED so every fork of a fresh tenant slot reuses
+    # one compiled scatter — python-int indexing would bake each new
+    # tenant id into the HLO and recompile per fork (serving admission
+    # forks at request rate; a compile per fork dwarfs the fork itself)
+    new_len = length[src] + (1 if bump else 0)
+    return (l1.at[dst].set(l1[src]),
+            l2.at[dst].set(l2[src]),
+            length.at[dst].set(new_len),
+            scalable.at[dst].set(scalable[src]))
+
+
+def _clone_into(fleet: ChainFleet, src: int, dst: int, *,
+                bump: bool) -> ChainFleet:
+    if int(fleet.cold_count[src]) > 0:
+        raise ValueError(
+            f"tenant {src} holds host-tier rows; promote_tenants before "
+            "cloning (cold entries cannot be shared across tenants)"
+        )
+    l1, l2, length, scalable = _clone_rows(
+        fleet.l1, fleet.l2, fleet.length, fleet.scalable,
+        jnp.int32(src), jnp.int32(dst), bump=bump)
+    return dataclasses.replace(fleet, l1=l1, l2=l2, length=length,
+                               scalable=scalable)
 
 
 def clone_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
@@ -572,18 +616,7 @@ def clone_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
     a cloned COLD entry would alias the host row across tenants and
     freeing either tenant would dangle the other — promote first
     (``promote_tenants``)."""
-    if int(fleet.cold_count[src]) > 0:
-        raise ValueError(
-            f"tenant {src} holds host-tier rows; promote_tenants before "
-            "cloning (cold entries cannot be shared across tenants)"
-        )
-    return dataclasses.replace(
-        fleet,
-        l1=fleet.l1.at[dst].set(fleet.l1[src]),
-        l2=fleet.l2.at[dst].set(fleet.l2[src]),
-        length=fleet.length.at[dst].set(fleet.length[src]),
-        scalable=fleet.scalable.at[dst].set(fleet.scalable[src]),
-    )
+    return _clone_into(fleet, src, dst, bump=False)
 
 
 def fork_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
@@ -598,8 +631,7 @@ def fork_tenant(fleet: ChainFleet, src: int, dst: int) -> ChainFleet:
             f"tenant {src} is at max_chain={fleet.spec.max_chain}; "
             "grow the fleet geometry before forking"
         )
-    out = clone_tenant(fleet, src, dst)
-    return dataclasses.replace(out, length=out.length.at[dst].add(1))
+    return _clone_into(fleet, src, dst, bump=True)
 
 
 def stamp_entries(fleet: ChainFleet, tenants, layers, pages,
@@ -734,7 +766,8 @@ def install_tenant(fleet: ChainFleet, t: int, *, l1, l2, length: int,
 # -- maintenance plane: streaming, GC, lease reclamation ---------------------
 
 
-def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
+def _reclaim(fleet: ChainFleet, sel: np.ndarray, *,
+             shared_rows=None) -> ChainFleet:
     """Repack each selected tenant's live rows into its leading lease
     quanta and return now-empty quanta to the allocator free list.
 
@@ -746,6 +779,13 @@ def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
     ``alloc_count`` shrink). ``overflow`` clears only for tenants whose
     row count actually shrank — reclaiming zero rows leaves the tenant as
     wedged as before, and clearing the flag would hide that.
+
+    ``shared_rows`` (the golden registry's ``pinned_rows()``) marks rows
+    a tenant may legally reference *without owning*: a golden fork's
+    entries alias its base's frozen rows. Like COLD entries, shared rows
+    are not repacked, keep their pointer verbatim, and never count
+    toward the referencing tenant's lease footprint — the owner tenant
+    (excluded from maintenance while registered) keeps them pinned.
     """
     spec = fleet.spec
     q = spec.lease_quantum
@@ -757,6 +797,10 @@ def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
     reclaimed = np.zeros(spec.n_tenants, np.int64)
     pool = fleet.pool
     l2 = fleet.l2
+    shared_lut = None
+    if shared_rows is not None and len(shared_rows):
+        shared_lut = np.zeros(spec.pool_capacity, bool)
+        shared_lut[np.asarray(shared_rows, np.int64)] = True
 
     for t in np.flatnonzero(sel):
         length_t = int(lengths[t])
@@ -769,6 +813,10 @@ def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
         # remapped by the repack LUT below)
         live = alloc & ~np.asarray(fmt.entry_zero(entries)) & ~cold
         rows = np.asarray(fmt.entry_ptr(entries))
+        sharedm = np.zeros(live.shape, bool)
+        if shared_lut is not None:
+            sharedm = live & shared_lut[np.where(live, rows, 0)]
+            live = live & ~sharedm
         used = np.unique(rows[live]).astype(np.int64)  # sorted global rows
         n_live = len(used)
         if n_live and not np.all(lease_owner[used // q] == t):
@@ -787,10 +835,11 @@ def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
             pool = pool.at[jnp.asarray(new_rows, jnp.int32)].set(vals)
             lut = np.zeros(spec.pool_capacity, np.uint32)
             lut[used] = new_rows.astype(np.uint32)
-            # COLD entries keep their (host-tier) ptr verbatim: the LUT
-            # maps device rows only
+            # COLD entries keep their (host-tier) ptr verbatim, and so do
+            # shared golden rows (another tenant's pinned, un-repacked
+            # rows): the LUT maps this tenant's own device rows only
             safe = np.where(live, rows, 0)
-            new_ptr = np.where(cold, rows, lut[safe])
+            new_ptr = np.where(cold | sharedm, rows, lut[safe])
             new_entries = fmt.pack_entry(
                 jnp.asarray(new_ptr.astype(np.uint32)),
                 fmt.entry_bfi(entries),
@@ -821,7 +870,7 @@ def _reclaim(fleet: ChainFleet, sel: np.ndarray) -> ChainFleet:
 
 
 def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
-                   reclaim: bool = True) -> ChainFleet:
+                   reclaim: bool = True, registry=None) -> ChainFleet:
     """Stream (merge layers ``[0, merge_upto]``) each selected tenant and
     return the pool quanta this frees to the lease allocator.
 
@@ -840,6 +889,11 @@ def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
             chain growth, where ``chain.stream`` raises).
         reclaim: run the shared ``_reclaim`` repack afterwards (default).
             Pass ``False`` for a metadata-only merge that frees nothing.
+        registry: the ``GoldenRegistry``, when the fleet runs one.
+            Registered golden *owners* are skipped (their chains are
+            content-frozen; a merge would invalidate every fork's base)
+            and forks' shared base rows ride through the repack
+            untouched (``_reclaim(shared_rows=...)``).
 
     Returns:
         The updated ``ChainFleet``. With ``reclaim=True``, rows orphaned
@@ -858,6 +912,8 @@ def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
     # rows — promote_tenants first, then stream
     cold = np.asarray(fleet.cold_count)
     sel = mask & (upto >= 0) & (upto < lengths - 1) & (cold == 0)
+    if registry is not None:
+        sel &= ~registry.golden_owner_mask(t)
 
     l1, l2 = fleet.l1, fleet.l2
     snap_dropped = np.asarray(fleet.snap_dropped).copy()
@@ -886,10 +942,15 @@ def stream_tenants(fleet: ChainFleet, mask, merge_upto, *,
         length=jnp.asarray(lengths, jnp.int32),
         snap_dropped=jnp.asarray(snap_dropped, bool),
     )
-    return _reclaim(out, sel) if reclaim else out
+    if not reclaim:
+        return out
+    return _reclaim(
+        out, sel,
+        shared_rows=registry.pinned_rows() if registry is not None else None,
+    )
 
 
-def compact(fleet: ChainFleet, mask=None) -> ChainFleet:
+def compact(fleet: ChainFleet, mask=None, *, registry=None) -> ChainFleet:
     """Fleet-level GC: repack every (selected) tenant's live rows and
     return the freed quanta to the allocator free list.
 
@@ -902,6 +963,11 @@ def compact(fleet: ChainFleet, mask=None) -> ChainFleet:
         fleet: the fleet state (returned updated, never mutated).
         mask: optional (T,) bool selecting which tenants to repack;
             ``None`` (default) compacts every tenant.
+        registry: the ``GoldenRegistry``, when the fleet runs one.
+            Golden owners are never repacked (their pointer layout is
+            part of the frozen fingerprint and their rows are pinned);
+            forks repack only their own rows, aliased base rows ride
+            through verbatim.
 
     Returns:
         The updated ``ChainFleet``: selected tenants' live rows repacked
@@ -913,7 +979,10 @@ def compact(fleet: ChainFleet, mask=None) -> ChainFleet:
     t = fleet.spec.n_tenants
     sel = (np.ones(t, bool) if mask is None
            else np.broadcast_to(np.asarray(mask, bool), (t,)))
-    return _reclaim(fleet, sel)
+    if registry is None:
+        return _reclaim(fleet, sel)
+    sel = sel & ~registry.golden_owner_mask(t)
+    return _reclaim(fleet, sel, shared_rows=registry.pinned_rows())
 
 
 # -- tiering: HBM <-> host demotion and promotion ----------------------------
@@ -941,7 +1010,7 @@ def _tenant_cold_rows(l2_t: np.ndarray, length_t: int):
 
 def demote_tenants(fleet: ChainFleet, store, tenants, *,
                    max_rows: int | None = None,
-                   verify: bool = True):
+                   verify: bool = True, registry=None):
     """Demote immutable snapshot-layer pages of the selected tenants to
     the host tier, freeing their device rows.
 
@@ -969,6 +1038,13 @@ def demote_tenants(fleet: ChainFleet, store, tenants, *,
             Oldest layers go first, so repeated budgeted calls demote
             coldest-first.
         verify: bit-verify every transferred row (default True).
+        registry: the ``GoldenRegistry``, when the fleet runs one.
+            Registered golden owners are skipped entirely (the frozen
+            base stays device-resident by contract), and rows pinned by
+            the registry are never picked from *any* tenant — a fork's
+            lower layers reference the shared base below its active
+            volume, exactly the demotion-eligible shape, and spilling
+            them would pull the base out from under every sibling fork.
 
     Returns:
         ``(fleet, report)`` where report is
@@ -976,6 +1052,13 @@ def demote_tenants(fleet: ChainFleet, store, tenants, *,
     """
     spec = fleet.spec
     sel = _tenant_sel(spec.n_tenants, tenants)
+    pinned_lut = None
+    if registry is not None:
+        sel &= ~registry.golden_owner_mask(spec.n_tenants)
+        pinned = registry.pinned_rows()
+        if pinned.size:
+            pinned_lut = np.zeros(spec.pool_capacity, bool)
+            pinned_lut[pinned] = True
     lengths = np.asarray(fleet.length)
     cold_count = np.asarray(fleet.cold_count).copy()
     # one full host copy, modified in place and pushed back once: entry
@@ -998,6 +1081,9 @@ def demote_tenants(fleet: ChainFleet, store, tenants, *,
         cold = (w0 & np.uint32(fmt.FLAG_COLD)) != 0
         hot = alloc & ((w0 & np.uint32(fmt.FLAG_ZERO)) == 0) & ~cold
         rows = (w0 & np.uint32(fmt.PTR_MASK)).astype(np.int64)
+        if pinned_lut is not None:
+            # golden-pinned rows are immovable while any fork aliases them
+            hot &= ~pinned_lut[np.where(hot, rows, 0)]
         if not hot.any():
             continue
         # a row's owner is the lowest layer referencing it (copy-forward
@@ -1059,7 +1145,10 @@ def demote_tenants(fleet: ChainFleet, store, tenants, *,
     )
     # repack: the demoted rows are no longer referenced by any hot entry,
     # so _reclaim returns their quanta to the allocator free list
-    out = _reclaim(out, _tenant_sel(spec.n_tenants, moved))
+    out = _reclaim(
+        out, _tenant_sel(spec.n_tenants, moved),
+        shared_rows=registry.pinned_rows() if registry is not None else None,
+    )
     return out, dict(rows_demoted=total, tenants=moved)
 
 

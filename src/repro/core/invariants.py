@@ -46,7 +46,8 @@ def _tenant_cold_rows(l2_t: np.ndarray, length_t: int) -> np.ndarray:
     return np.unique(np.asarray(fmt.entry_ptr(entries))[coldm].astype(np.int64))
 
 
-def check_fleet_invariants(fl, *, store=None, check_leases: bool = True) -> None:
+def check_fleet_invariants(fl, *, store=None, check_leases: bool = True,
+                           registry=None) -> None:
     """Assert the structural invariants of a ``ChainFleet`` (and, when
     given, the ``TieredStore`` behind it).
 
@@ -54,6 +55,13 @@ def check_fleet_invariants(fl, *, store=None, check_leases: bool = True) -> None
     fleets whose lease allocator is deliberately idle (the KV cache's
     metadata plane, where pool rows are refcounted block ids shared
     across tenant rows by design).
+
+    ``registry`` (a ``core.golden.GoldenRegistry``) relaxes the
+    no-cross-tenant-aliasing rule in exactly one place: a recorded
+    golden *fork* may reference rows inside its base's pinned set —
+    tracked aliasing, checked against the registry's per-fork row sets
+    and the registry's own bookkeeping (``GoldenRegistry.check``).
+    Without a registry, any foreign reference is corruption, as before.
     """
     spec = fl.spec
     q = spec.lease_quantum
@@ -89,8 +97,18 @@ def check_fleet_invariants(fl, *, store=None, check_leases: bool = True) -> None
         live = allocm & ~zerom & ~coldm
         rows = np.asarray(fmt.entry_ptr(entries))[live]
         if check_leases and rows.size:
-            assert (owner[rows // q] == t).all(), \
-                f"tenant {t} references a foreign row"
+            own = owner[rows // q] == t
+            if not own.all():
+                # legal exactly when t is a recorded golden fork and the
+                # aliased rows sit inside its base's pinned set
+                foreign = np.unique(rows[~own]).astype(np.int64)
+                allowed = (registry.shared_rows_for(t)
+                           if registry is not None else None)
+                assert allowed is not None \
+                    and np.isin(foreign, allowed).all(), (
+                    f"tenant {t} references a foreign row outside any "
+                    "registered golden base"
+                )
         cold_rows = _tenant_cold_rows(l2[t], int(lengths[t]))
         assert cold_rows.size == int(cold_count[t]), (
             f"tenant {t}: cold_count={int(cold_count[t])} but its L2 "
@@ -113,6 +131,11 @@ def check_fleet_invariants(fl, *, store=None, check_leases: bool = True) -> None
 
     if store is not None:
         check_store_invariants(store, referenced=all_cold)
+
+    if registry is not None:
+        # the registry's own bookkeeping: frozen owners unchanged, pinned
+        # rows still lease-owned by their owner, layer refcounts == forks
+        registry.check(fl)
 
 
 def check_store_invariants(store, *, referenced=None) -> None:
@@ -198,3 +221,24 @@ def check_kv_invariants(cache) -> None:
         )
     for sid in cache._cold_kv:
         assert sid in cache._seqs, f"host spill for unknown sid {sid}"
+
+    # golden (shared-base) bookkeeping: the registration map and the
+    # per-sequence flags agree, and a registered prefix is live, fully
+    # device-resident, and every block it shares is refcounted
+    golden = getattr(cache, "_golden", {})
+    for sid in golden:
+        assert sid in cache._seqs, f"golden registration for unknown sid {sid}"
+        seq = cache._seqs[sid]
+        assert not seq.freed, f"golden sid {sid} is tombstoned"
+        assert not seq.cold, f"golden sid {sid} holds host-spilled blocks"
+        assert seq.length > 0, f"golden sid {sid} is empty"
+    for sid, seq in cache._seqs.items():
+        flagged = bool(getattr(seq, "golden", False))
+        assert flagged == (sid in golden), (
+            f"sid {sid}: golden flag {flagged} disagrees with the "
+            "registration map"
+        )
+        if flagged:
+            for b in seq.refs:
+                assert ref[b] >= 1, \
+                    f"golden sid {sid} shares unreferenced block {b}"

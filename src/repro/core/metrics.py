@@ -21,6 +21,10 @@ Tiering (paper §6.3's 15x memory headline, fleet-granularity analogue):
 instead of peeking at allocator internals — and ``tiered_pool_bytes``
 is the analytical bytes-resident-per-tenant model behind the cost table
 in ``docs/memory.md``.
+
+Golden-prefix dedup: ``golden_residency`` snapshots the shared-base
+counters off a ``GoldenRegistry`` — the fleet-plane mirror of
+``tier_residency``, asserted on by ``benchmarks/prefix.py``.
 """
 
 from __future__ import annotations
@@ -110,6 +114,34 @@ def tier_residency(fleet, store=None) -> TierResidency:
         cold_tenants=int(np.sum(cold > 0)),
         demoted_rows=0 if store is None else store.demoted_rows,
         promoted_rows=0 if store is None else store.promoted_rows,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldenResidency:
+    """One observation of the golden-prefix dedup state (core plane)."""
+
+    golden_chains: int      # registered content-addressed bases
+    golden_forks: int       # live tenants forked off a base
+    golden_rows_pinned: int # distinct device rows pinned by bases
+    dedup_rows_saved: int   # rows a dedup-free fleet would also hold
+
+
+def golden_residency(registry) -> GoldenResidency:
+    """Golden-registry counters off a ``core.golden.GoldenRegistry``.
+
+    The supported observability surface for prefix dedup on the fleet
+    plane — the mirror of ``tier_residency`` for the golden registry.
+    ``dedup_rows_saved`` sums, over every live fork, the shared rows the
+    fork aliases instead of copying: the device rows a registry-free
+    fleet would additionally lease to back the same tenants.
+    """
+    st = registry.stats()
+    return GoldenResidency(
+        golden_chains=st["golden_chains"],
+        golden_forks=st["golden_forks"],
+        golden_rows_pinned=st["golden_rows_pinned"],
+        dedup_rows_saved=st["dedup_rows_saved"],
     )
 
 

@@ -253,11 +253,18 @@ def import_tenant(fleet, t: int, blob: TenantBlob, *, store=None):
     )
 
 
-def detach_tenant(fleet, t: int, blob: TenantBlob, *, store=None):
+def detach_tenant(fleet, t: int, blob: TenantBlob, *, store=None,
+                  registry=None):
     """Release tenant ``t`` from the source fleet — the commit point of a
     migration. Refuses with ``MigrationError`` if the tenant's state no
     longer matches ``blob`` (a write/snapshot/maintenance op landed after
     export): the blob is stale and must be re-exported.
+
+    ``registry``: the source fleet's ``GoldenRegistry``, when it runs
+    one. Migrating a golden *fork* away releases its pins here (the
+    destination copy is self-contained — export materialized the shared
+    pages into the blob); detaching a registered *owner* is refused by
+    ``free_tenant`` until it is unregistered.
     """
     fp = tenant_fingerprint(fleet, t)
     if fp != blob.fingerprint:
@@ -265,7 +272,7 @@ def detach_tenant(fleet, t: int, blob: TenantBlob, *, store=None):
             f"tenant {t} changed after export (mid-migration write or "
             "maintenance op): re-export before detaching"
         )
-    return fleet_lib.free_tenant(fleet, t, store=store)
+    return fleet_lib.free_tenant(fleet, t, store=store, registry=registry)
 
 
 # -- verification & orchestration --------------------------------------------
@@ -284,7 +291,7 @@ def materialize_tenant(fleet, t: int, *, store=None,
 
 def migrate_tenant(src_fleet, src_t: int, dst_fleet, dst_t: int, *,
                    src_store=None, dst_store=None, method: str = "auto",
-                   verify: bool = True):
+                   verify: bool = True, src_registry=None):
     """Full migration round-trip: export from ``src_fleet[src_t]``,
     import into ``dst_fleet[dst_t]``, bit-verify every guest page, and
     only then detach the source.
@@ -308,7 +315,8 @@ def migrate_tenant(src_fleet, src_t: int, dst_fleet, dst_t: int, *,
                 f"destination tenant {dst_t} is not bit-identical to "
                 f"source tenant {src_t}; source left intact"
             )
-    src_fleet = detach_tenant(src_fleet, src_t, blob, store=src_store)
+    src_fleet = detach_tenant(src_fleet, src_t, blob, store=src_store,
+                              registry=src_registry)
     report = dict(
         length=blob.length,
         rows_hot=blob.n_hot,

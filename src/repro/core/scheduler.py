@@ -82,6 +82,12 @@ class MaintenanceScheduler:
     policy — while the fleet holds more device rows than the budget,
     ticks demote immutable-layer pages into the ``TieredStore``, at most
     ``demote_rows_per_tick`` rows per tick.
+    ``registry``: the fleet's ``GoldenRegistry``, when it runs one.
+    Registered golden owners are content-frozen, so every maintenance
+    path here leaves them alone — they are dropped from the stream and
+    demotion queues, and the registry rides along into
+    ``stream_tenants``/``compact``/``demote_tenants`` so fork-pinned
+    rows are never relocated or spilled (the demote/fork race guard).
     """
 
     def __init__(self, fleet: ChainFleet, *, max_tenants_per_tick: int = 1,
@@ -89,7 +95,7 @@ class MaintenanceScheduler:
                  compact_on_overflow: bool = True,
                  aging_weight: int = 1,
                  store=None, device_page_budget: int | None = None,
-                 demote_rows_per_tick: int = 64):
+                 demote_rows_per_tick: int = 64, registry=None):
         if max_tenants_per_tick < 1:
             raise ValueError("max_tenants_per_tick must be >= 1")
         if aging_weight < 0:
@@ -113,6 +119,7 @@ class MaintenanceScheduler:
         self.store = store
         self.device_page_budget = device_page_budget
         self.demote_rows_per_tick = demote_rows_per_tick
+        self.registry = registry
         self.rows_demoted = 0
         # tenants whose demotion attempt moved nothing, parked at their
         # fingerprint (same convergence mechanism as _wedged)
@@ -180,6 +187,10 @@ class MaintenanceScheduler:
         # tenants holding demoted pages can't stream (the merge would
         # strand their host rows) — promotion un-parks them naturally
         need &= st["cold_count"] == 0
+        if self.registry is not None:
+            # golden owners are content-frozen while registered: a merge
+            # would rewrite the base every live fork resolves through
+            need &= ~self.registry.golden_owner_mask(len(need))
         age = np.asarray([self._age.get(t, 0)
                           for t in range(len(need))], np.int64)
         rank = st["length"].astype(np.int64) + self.aging_weight * age
@@ -210,6 +221,13 @@ class MaintenanceScheduler:
         self._demote_parked = {t: f for t, f in self._demote_parked.items()
                                if fp[t] == f}
         need = (st["length"] >= 2) & (st["alloc_count"] > 0)
+        if self.registry is not None:
+            # the demote/fork race guard, queue side: a registered golden
+            # base never spills (its frozen layers are exactly the
+            # "immutable state below the active volume" this policy
+            # targets) — and fork-pinned rows are additionally excluded
+            # row-by-row inside demote_tenants
+            need &= ~self.registry.golden_owner_mask(len(need))
         order = np.lexsort((-st["alloc_count"], -st["length"]))
         return [int(t) for t in order
                 if need[t] and int(t) not in self._demote_parked]
@@ -227,7 +245,8 @@ class MaintenanceScheduler:
         if not cands:
             return 0
         self.fleet, rep = fleet_lib.demote_tenants(
-            self.fleet, self.store, cands, max_rows=remaining
+            self.fleet, self.store, cands, max_rows=remaining,
+            registry=self.registry,
         )
         done = rep["rows_demoted"]
         if done < remaining:
@@ -296,7 +315,8 @@ class MaintenanceScheduler:
             mask[picks] = True
             # merge everything below each tenant's active volume
             upto = st0["length"] - 2
-            self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto)
+            self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto,
+                                                  registry=self.registry)
         compacted = False
         still_over = np.flatnonzero(np.asarray(self.fleet.overflow))
         need_compact = [int(t) for t in still_over
@@ -307,7 +327,8 @@ class MaintenanceScheduler:
             # this scheduler exists to avoid
             mask = np.zeros(n_t, bool)
             mask[need_compact] = True
-            self.fleet = fleet_lib.compact(self.fleet, mask)
+            self.fleet = fleet_lib.compact(self.fleet, mask,
+                                           registry=self.registry)
             compacted = True
         # park every touched tenant that made no progress (no-op stream,
         # unreclaimable overflow, ...) at its current occupancy, so it is

@@ -121,6 +121,7 @@ class _Seq:
     tenant: Optional[int] = None  # fleet row while unfreed; None once freed
     path: tuple = ()         # fork ancestry, root first, self last
     cold: set = dataclasses.field(default_factory=set)  # host-spilled blks
+    golden: bool = False     # frozen shared-prefix base (register_golden)
 
 
 #: Initial fleet geometry; both axes grow by doubling on demand.
@@ -176,6 +177,9 @@ class PagedKVCache:
         self._cold_kv: dict[int, dict[int, tuple]] = {}
         self.demoted_blocks = 0   # lifetime spills (tier metrics)
         self.promoted_blocks = 0  # lifetime un-spills
+        # golden prefixes: sid -> content hash (register_golden); the
+        # flagged sequences are frozen — forked, never written or freed
+        self._golden: dict[int, str] = {}
 
     # -- fleet geometry -------------------------------------------------------
 
@@ -365,6 +369,11 @@ class PagedKVCache:
         row.
         """
         seq = self._live_seq(sid)
+        if seq.golden:
+            raise ValueError(
+                f"sequence {sid} is a registered golden prefix; call "
+                "release_golden(sid) before freeing it"
+            )
         seq.freed = True
         t = seq.tenant
         seq.tenant = None
@@ -648,6 +657,11 @@ class PagedKVCache:
         cow_dst: list[int] = []
         for sid in sids:
             seq = self._live_seq(sid)
+            if seq.golden:
+                raise RuntimeError(
+                    f"sequence {sid} is a registered golden prefix and is "
+                    "frozen; fork it to continue decoding"
+                )
             blk = seq.length // bs
             if blk >= self.cfg.max_blocks_per_seq:
                 raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
@@ -712,6 +726,34 @@ class PagedKVCache:
                                        row_map={seq.tenant: 0})
         self._stamp_fleet(writes)
         return int(seq.table[seq.length // self.cfg.block_size])
+
+    def prepare_step_single(self, sid: int, *, pad_to: int = 1,
+                            pad_block: int | None = None):
+        """``prepare_step`` for a batch of ONE — the admission path.
+
+        A *narrow* (single tenant row) fleet resolve drives both the
+        COW-prepare and the attention table, so decoding a lone sequence
+        — golden suffix admission pushing prompt tokens through the
+        decode step — costs O(C·P) instead of ``_resolve_all``'s
+        fleet-wide O(T·C·P): admission latency stays flat as the fleet
+        fills. Output is bit-identical to ``prepare_step([sid], ...)``.
+        """
+        self._check_pad(1, pad_to, pad_block)
+        seq = self._live_seq(sid)
+        if seq.cold:
+            self.promote_seq(sid)
+        table_r, owner_r, lookups_r, _ = self._resolve_tenant(seq.tenant)
+        self.lookup_count += self._count_lookups(seq, table_r, lookups_r)
+        writes = self._prepare_against([sid], table_r[None], owner_r[None],
+                                       row_map={seq.tenant: 0})
+        self._stamp_fleet(writes)
+        n = max(1, pad_to)
+        fill = -1 if pad_block is None else pad_block
+        out = np.full((n, self.cfg.max_blocks_per_seq), fill, np.int32)
+        out[0] = np.where(table_r >= 0, table_r, fill)
+        lengths = np.zeros(n, np.int32)
+        lengths[0] = seq.length
+        return jnp.asarray(out), jnp.asarray(lengths)
 
     def prepare_step(self, sids, *, pad_to: int = 0,
                      pad_block: int | None = None):
@@ -860,6 +902,11 @@ class PagedKVCache:
         token-loop path.
         """
         seq = self._live_seq(sid)
+        if seq.golden:
+            raise RuntimeError(
+                f"sequence {sid} is a registered golden prefix and is "
+                "frozen; fork it to continue decoding"
+            )
         nt = int(k.shape[1])
         if nt == 0:
             return
@@ -896,6 +943,74 @@ class PagedKVCache:
             v.astype(self.cfg.dtype)
         )
         seq.length = end
+
+    def prepare_span(self, sid: int, n: int):
+        """COW-prepare the next ``n`` token slots of one sequence for an
+        external bulk write (``serve.paged_decode.paged_suffix_prefill``).
+
+        The prepare phase of ``append_prefill`` without the data: one
+        host-side resolve, the per-block COW protocol (only a shared
+        partial first block pays a data copy), one batched stamp. The
+        resolve is the retained host oracle, not a fleet dispatch — this
+        is the single-sequence admission edge, where a device roundtrip
+        per admitted request would dominate the fork it prepares; the
+        oracle's walk is O(blocks · fork depth) python over the host
+        mirrors, bit-identical to the fleet resolve by the oracle
+        contract. Returns ``(table, blocks, offsets)`` — the sequence's
+        post-prepare resolved table (``(max_blocks,)`` int32, -1 holes)
+        and the pool slot of each of the ``n`` positions. Commit with
+        ``advance_span`` after the external scatter lands.
+        """
+        seq = self._live_seq(sid)
+        if seq.golden:
+            raise RuntimeError(
+                f"sequence {sid} is a registered golden prefix and is "
+                "frozen; fork it to continue decoding"
+            )
+        if n <= 0:
+            raise ValueError(f"prepare_span needs n >= 1, got {n}")
+        bs = self.cfg.block_size
+        start, end = seq.length, seq.length + n
+        if (end - 1) // bs >= self.cfg.max_blocks_per_seq:
+            raise RuntimeError(f"sequence {sid} is at max_blocks_per_seq")
+        if seq.cold:
+            self.promote_seq(sid)
+        table_r, owner_r, lookups = self._resolve_oracle(sid)
+        self.lookup_count += lookups
+        # the oracle may return the live host mirrors themselves — copy so
+        # the patched view (and the returned table) never alias cache state
+        table_r = np.array(table_r, dtype=np.int32)
+        owner_r = np.array(owner_r, dtype=np.int32)
+        tables, owners = table_r[None], owner_r[None]
+        row_map = {seq.tenant: 0}
+        writes: list[tuple[int, int, int]] = []
+        cow_src: list[int] = []
+        cow_dst: list[int] = []
+        for blk in range(start // bs, (end - 1) // bs + 1):
+            self._prepare_block(
+                seq, blk, tables, owners, row_map,
+                writes, cow_src, cow_dst,
+                copy_data=blk == start // bs and bool(start % bs),
+            )
+        self._copy_blocks(cow_src, cow_dst)
+        self._stamp_fleet(writes)
+        pos = np.arange(start, end)
+        return (table_r, seq.table[pos // bs].astype(np.int32),
+                (pos % bs).astype(np.int32))
+
+    def advance_span(self, sid: int, n: int) -> None:
+        """Commit ``n`` tokens written externally into slots set up by
+        ``prepare_span`` (the suffix-prefill scatter)."""
+        seq = self._live_seq(sid)
+        bs = self.cfg.block_size
+        for p in range(seq.length, seq.length + n):
+            blk = p // bs
+            if seq.table[blk] < 0 or seq.owner[blk] != sid:
+                raise RuntimeError(
+                    f"sequence {sid} has no prepared slot at position {p}; "
+                    f"call prepare_span(sid, n) before advance_span"
+                )
+        seq.length += n
 
     # -- tiering: host spill of parked sequences' exclusive blocks -------------
 
@@ -977,6 +1092,10 @@ class PagedKVCache:
         the number of blocks spilled.
         """
         seq = self._live_seq(sid)
+        if seq.golden:
+            # a golden base's blocks back live forks bit-for-bit; spilling
+            # them would stale the shared table ids under the forks
+            return 0
         blks = self._demotable_blocks(seq)
         if max_blocks is not None:
             blks = blks[:max_blocks]
@@ -1051,6 +1170,75 @@ class PagedKVCache:
     def host_blocks_in_use(self) -> int:
         """Blocks currently resident in the host tier (spilled K/V)."""
         return sum(len(d) for d in self._cold_kv.values())
+
+    # -- golden prefixes: content-addressed shared-base registration -----------
+
+    def register_golden(self, sid: int) -> str:
+        """Freeze a sequence as a golden shared-prefix base.
+
+        Promotes any spilled blocks first (a base must stay fully
+        device-resident — its table ids back every fork bit-for-bit),
+        then computes the content address: a sha256 over the sequence's
+        *resolved* K/V bytes and length, so two prefixes hash equal
+        exactly when their cached state is bit-identical, regardless of
+        fork topology or block placement. A registered base is frozen:
+        every write path and ``free_seq`` refuse it, and ``demote_seq``
+        skips it, until ``release_golden``. Forking it stays the normal
+        ``fork`` — O(1) table clone + refcounts. Idempotent for an
+        already-registered sid. Returns the content hash.
+        """
+        seq = self._live_seq(sid)
+        if sid in self._golden:
+            return self._golden[sid]
+        if seq.length == 0:
+            raise ValueError(f"sequence {sid} is empty; nothing to register")
+        if seq.cold:
+            self.promote_seq(sid)
+        k, v = self.gather(sid)
+        h = hashlib.sha256()
+        h.update(np.asarray([seq.length], np.int64).tobytes())
+        h.update(np.ascontiguousarray(np.asarray(k)).tobytes())
+        h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
+        digest = h.hexdigest()
+        seq.golden = True
+        self._golden[sid] = digest
+        return digest
+
+    def release_golden(self, sid: int) -> str:
+        """Un-freeze a golden base, returning its content hash. The
+        sequence becomes an ordinary live sequence again (writable,
+        freeable, demotable); forks taken while it was golden keep their
+        shared blocks alive through the usual refcounts."""
+        if sid not in self._golden:
+            raise KeyError(f"sequence {sid} is not a registered golden prefix")
+        digest = self._golden.pop(sid)
+        self._seqs[sid].golden = False
+        return digest
+
+    def is_golden(self, sid: int) -> bool:
+        return sid in self._golden
+
+    def golden_stats(self) -> dict:
+        """Dedup accounting of the registered golden bases.
+
+        ``golden_blocks``: distinct pool blocks referenced by golden
+        sequences. ``golden_blocks_shared``: the subset whose refcount
+        exceeds one — blocks live forks are aliasing right now.
+        ``dedup_blocks_saved``: sum over golden blocks of ``ref - 1`` —
+        the pool blocks a dedup-free serving plane would additionally
+        hold to back the same set of sequences.
+        """
+        blocks: set[int] = set()
+        for sid in self._golden:
+            blocks |= self._seqs[sid].refs
+        shared = sum(1 for b in blocks if int(self._ref[b]) > 1)
+        saved = sum(int(self._ref[b]) - 1 for b in blocks)
+        return dict(
+            golden_seqs=len(self._golden),
+            golden_blocks=len(blocks),
+            golden_blocks_shared=shared,
+            dedup_blocks_saved=saved,
+        )
 
     # -- reads (reference path; kernels/paged_attention is the fast path) ------
 

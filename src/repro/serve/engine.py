@@ -40,6 +40,14 @@ spills its exclusively-owned KV blocks to host memory
 the first ``step()`` whose batch includes the sequence (the decode path's
 ``prepare_step`` promotes before resolving tables). See
 ``docs/memory.md`` for the full residency lifecycle.
+
+Golden prefixes: ``register_golden(prompt)`` prefills a prompt once and
+freezes it as a shared base; an ``add_request`` whose prompt extends a
+registered base (radix-trie probe on token ids) COW-forks the base and
+prefills only the suffix — ONE chunked dispatch against the forked
+paged prefix (``paged_suffix_prefill``) — so shared-prefix prefill
+becomes a fork, costing zero fresh pool blocks and zero prefill FLOPs
+for the shared span (``docs/architecture.md``).
 """
 
 from __future__ import annotations
@@ -51,10 +59,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import fleet as fleet_lib
+from repro.core.golden import PrefixTrie
 from repro.kvcache.paged import PagedKVCache, PagedKVConfig
 from repro.models import layers as L
 from repro.models.api import get_model
-from repro.serve.paged_decode import paged_decode_step, paged_decode_step_fused
+from repro.serve.paged_decode import (
+    paged_decode_step,
+    paged_decode_step_fused,
+    paged_suffix_prefill,
+)
 
 
 class Engine:
@@ -92,6 +105,16 @@ class Engine:
         )
         self.active: dict[int, list[int]] = {}  # sid -> generated tokens
         self.parked: dict[int, list[int]] = {}  # sid -> tokens, off-batch
+        # prefill is jitted ONCE per engine: re-wrapping per request would
+        # re-trace (and re-lower) the whole prefill on every admission
+        self._jit_prefill = jax.jit(self.model.prefill)
+        # golden-prefix registry: the admission-time dedup plane. The trie
+        # maps registered prompt token ids -> golden sid; _golden_info
+        # keeps each base's prompt (for trie removal) and its predicted
+        # first token (an exact-match admission skips the model entirely).
+        self._trie = PrefixTrie()
+        self._golden_info: dict[int, tuple[tuple[int, ...], int]] = {}
+        self.golden_hits = 0   # admissions served by forking a base
         # Scratch block absorbing the in-step pool writes of padded batch
         # rows, so a padded decode can never touch a live sequence's blocks.
         self._pad_block = self.kv.reserve_block()
@@ -100,16 +123,97 @@ class Engine:
         self.scheduler = scheduler
         self.last_maintenance: dict | None = None
 
-    def add_request(self, prompt_tokens: np.ndarray) -> int:
-        """Prefill a prompt; returns the sequence id."""
+    def _prefill_seq(self, prompt_tokens) -> tuple[int, int]:
+        """Full-prompt prefill into a fresh sequence: one model prefill,
+        one bulk KV append. Returns ``(sid, first_token)``."""
         toks = jnp.asarray(prompt_tokens, jnp.int32)[None]
-        logits, cache = jax.jit(self.model.prefill)(self.params, dict(tokens=toks))
+        logits, cache = self._jit_prefill(self.params, dict(tokens=toks))
         sid = self.kv.new_seq()
         # cache k/v: (L, 1, S, Hkv, D) → (L, S, Hkv, D)
         self.kv.append_prefill(sid, cache["k"][:, 0], cache["v"][:, 0])
-        first = int(jnp.argmax(logits[0]))
+        return sid, int(jnp.argmax(logits[0]))
+
+    def add_request(self, prompt_tokens: np.ndarray) -> int:
+        """Admit a prompt; returns the sequence id.
+
+        Admission probes the golden-prefix trie first: when a registered
+        base's prompt is a prefix of this one, the base is COW-forked —
+        the shared prefix contributes ZERO fresh pool blocks and zero
+        prefill FLOPs — and only the suffix runs through one chunked
+        suffix-prefill dispatch. An exact match skips the model entirely
+        (the base's first token was recorded at registration). Without a
+        trie hit this is the ordinary full prefill.
+        """
+        toks = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        depth, gsid = self._trie.longest_prefix(toks)
+        if gsid is not None:
+            self.golden_hits += 1
+            sid = self.kv.fork(gsid)
+            suffix = toks[depth:]
+            nxt = (self._suffix_prefill(sid, suffix) if suffix
+                   else self._golden_info[gsid][1])
+            self.active[sid] = [nxt]
+            return sid
+        sid, first = self._prefill_seq(prompt_tokens)
         self.active[sid] = [first]
         return sid
+
+    def _suffix_prefill(self, sid: int, tokens) -> int:
+        """Push a prompt suffix through ONE chunked device dispatch
+        against the sequence's paged prefix (``paged_suffix_prefill``)
+        and return the first generated token. The chunk is padded to a
+        power-of-two bucket — padded rows scatter into the reserved
+        scratch block and their outputs are discarded — so admission
+        compiles once per bucket, not once per suffix length."""
+        s = len(tokens)
+        pad = self._bucket(s)
+        start = self.kv.seq_length(sid)
+        table, blks, offs = self.kv.prepare_span(sid, s)
+        fill = self._pad_block
+        tbl = np.where(table >= 0, table, fill).astype(np.int32)
+        tables = np.broadcast_to(tbl, (pad, tbl.size))
+        sb = np.full(pad, fill, np.int32)
+        sb[:s] = blks
+        so = np.zeros(pad, np.int32)
+        so[:s] = offs
+        attn_lens = np.ones(pad, np.int32)
+        attn_lens[:s] = start + 1 + np.arange(s)
+        tok_row = np.zeros((1, pad), np.int32)
+        tok_row[0, :s] = tokens
+        logits, pk, pv = paged_suffix_prefill(
+            self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
+            jnp.asarray(tables), jnp.asarray(sb), jnp.asarray(so),
+            jnp.asarray(attn_lens), jnp.asarray(tok_row),
+        )
+        self.kv.commit_pools(pk, pv)
+        self.kv.advance_span(sid, s)
+        return int(jnp.argmax(logits[s - 1]))
+
+    def register_golden(self, prompt_tokens: np.ndarray) -> int:
+        """Prefill a prompt and freeze it as a golden shared-prefix base.
+
+        The base never joins the decode batch: it exists to be forked by
+        later ``add_request`` admissions whose prompts extend its token
+        ids. Its KV blocks are frozen device-resident
+        (``PagedKVCache.register_golden``) until ``release_golden``.
+        Returns the base's sid.
+        """
+        toks = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        sid, first = self._prefill_seq(prompt_tokens)
+        self.kv.register_golden(sid)
+        self._trie.insert(toks, sid)
+        self._golden_info[sid] = (tuple(toks), first)
+        return sid
+
+    def release_golden(self, sid: int) -> None:
+        """Retire a golden base: unregister it from the trie and the KV
+        plane, then free it. Live forks keep their shared blocks through
+        the usual refcounts (the base is tombstoned until the last fork
+        frees)."""
+        toks, _ = self._golden_info.pop(sid)
+        self._trie.remove(list(toks))
+        self.kv.release_golden(sid)
+        self.kv.free_seq(sid)
 
     def fork_request(self, sid: int) -> int:
         child = self.kv.fork(sid)   # promotes a parked parent first
@@ -195,18 +299,15 @@ class Engine:
             b *= 2
         return b
 
-    def step(self) -> dict[int, int]:
-        """Decode one token for every active sequence — one fleet-batched
-        device dispatch: stacked block tables, padded to a size bucket."""
-        sids = sorted(self.active)
-        if not sids:
-            # an idle engine is the cheapest time for background work —
-            # keep draining the maintenance backlog while polling
-            self._maintain()
-            return {}
+    def _decode(self, sids, last_tokens) -> dict[int, int]:
+        """ONE fleet-batched decode dispatch: COW-prepare, attention,
+        pool commit, advance — for ``sids`` feeding ``last_tokens``.
+        Returns ``{sid: next_token}``. The device core of ``step()``,
+        shared with golden suffix admission (``add_request`` on a trie
+        hit), so both paths run the identical compiled step."""
         pad_to = self._bucket(len(sids))
         tok_col = np.zeros((pad_to, 1), np.int32)
-        tok_col[: len(sids), 0] = [self.active[s][-1] for s in sids]
+        tok_col[: len(sids), 0] = last_tokens
         if self.decode_path == "fused":
             # No table materialization: the narrow COW-prepare resolve
             # stamps this step's write slots, then the decode step reads
@@ -224,10 +325,17 @@ class Engine:
             # ONE stacked fleet resolve serves both the COW-prepare mask
             # (the slots the decode step's in-place scatter will hit) and
             # the attention block tables; the sids→tenant-rows mapping
-            # ships once.
-            tables, lengths = self.kv.prepare_step(
-                sids, pad_to=pad_to, pad_block=self._pad_block
-            )
+            # ships once. A lone sequence (suffix admission) takes the
+            # narrow single-row resolve — O(C·P), not O(T·C·P) — so
+            # admission latency stays flat as the fleet fills.
+            if len(sids) == 1:
+                tables, lengths = self.kv.prepare_step_single(
+                    sids[0], pad_to=pad_to, pad_block=self._pad_block
+                )
+            else:
+                tables, lengths = self.kv.prepare_step(
+                    sids, pad_to=pad_to, pad_block=self._pad_block
+                )
             logits, pk, pv = paged_decode_step(
                 self.cfg, self.params, self.kv.pool_k, self.kv.pool_v,
                 tables, lengths, jnp.asarray(tok_col),
@@ -239,9 +347,21 @@ class Engine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))  # fleetlint: disable=FL002
         for i, sid in enumerate(sids):
             self.kv.advance(sid)
-            tok = int(nxt[i])
+            out[sid] = int(nxt[i])
+        return out
+
+    def step(self) -> dict[int, int]:
+        """Decode one token for every active sequence — one fleet-batched
+        device dispatch: stacked block tables, padded to a size bucket."""
+        sids = sorted(self.active)
+        if not sids:
+            # an idle engine is the cheapest time for background work —
+            # keep draining the maintenance backlog while polling
+            self._maintain()
+            return {}
+        out = self._decode(sids, [self.active[s][-1] for s in sids])
+        for sid, tok in out.items():
             self.active[sid].append(tok)
-            out[sid] = tok
         self._maintain()
         return out
 
@@ -258,6 +378,8 @@ class Engine:
             lookups=self.kv.lookup_count,
             n_seqs=len(self.active),
             n_parked=len(self.parked),
+            golden_hits=self.golden_hits,
+            **self.kv.golden_stats(),
         )
         if self.scheduler is not None:
             stats["maintenance"] = self.scheduler.stats()

@@ -76,6 +76,59 @@ def paged_decode_step(cfg: ModelConfig, params, pool_k, pool_v, tables,
 
 
 @partial(jax.jit, static_argnames=("cfg",))
+def paged_suffix_prefill(cfg: ModelConfig, params, pool_k, pool_v, tables,
+                         slots_blk, slots_off, attn_lens, tokens):
+    """Prefill S suffix tokens of ONE sequence whose first tokens already
+    sit in the paged pool — the golden-fork admission step.
+
+    A suffix chunk is ordinary causal prefill against a paged prefix:
+    per layer, every suffix position's K/V is computed from the same
+    input hidden states, scattered into its COW-prepared pool slot, and
+    attention then runs the suffix positions as a *batch of S queries*
+    over the shared block table with per-position lengths — position i
+    sees the prefix plus suffix tokens ``<= i``, exactly causal. ONE
+    device dispatch replaces S per-token decode steps.
+
+    pool_k/pool_v: (L, nb, bs, Hkv, D); tables: (S, M) int32 (the
+    sequence's table broadcast per position); slots_blk/slots_off: (S,)
+    int32 pool slot of each suffix position (padded positions point at a
+    reserved scratch block); attn_lens: (S,) int32 — prefix + i + 1 for
+    real positions (1 for padded rows, whose outputs are discarded);
+    tokens: (1, S) int32. Returns (logits (S, V), new_pool_k,
+    new_pool_v) — the caller reads the last *real* row.
+    """
+    s = tokens.shape[1]
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]      # (1,S,d)
+    positions = (attn_lens - 1)[None, :]                     # (1,S)
+
+    def body(x, inputs):
+        p, pk, pv = inputs
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, positions, rope_theta=cfg.rope_theta,
+                             use_rope=cfg.use_rope)
+        pk = pk.at[slots_blk, slots_off].set(k[0].astype(pk.dtype))
+        pv = pv.at[slots_blk, slots_off].set(v[0].astype(pv.dtype))
+        attn = pa_ops.paged_attention(
+            q[0].astype(L.COMPUTE_DTYPE), pk, pv, tables, attn_lens
+        )
+        x = x + attn.reshape(1, s, -1).astype(x.dtype) @ p["attn"]["wo"].astype(x.dtype)
+        h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff, _ = moe_lib.moe_apply(cfg, p["ff"], h2)
+        else:
+            ff = L.mlp_apply(p["ff"], h2, cfg.activation)
+        return x + ff, (pk, pv)
+
+    x, (pk, pv) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[0] @ output_matrix(cfg, params).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, pk, pv
+
+
+@partial(jax.jit, static_argnames=("cfg",))
 def paged_decode_step_fused(cfg: ModelConfig, params, pool_k, pool_v, l2,
                             chain_lengths, tenants, lengths, write_blocks,
                             tokens):

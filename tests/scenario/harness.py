@@ -8,13 +8,17 @@ system through the kinds of storms a provider fleet actually sees —
   scheduler): COW write bursts, snapshot (deep-chain) churn, streaming,
   compaction, scheduler ticks, demote/promote races, tenant free/attach
   cycles, lease exhaustion, live migration to a second fleet with
-  different geometry, and writes landing mid-migration (the detach guard
-  must fire);
+  different geometry, writes landing mid-migration (the detach guard
+  must fire), and golden-chain churn — register/fork/release against a
+  ``GoldenRegistry`` threaded through every maintenance op, so frozen
+  bases stay bit-stable under compaction, streaming and demotion while
+  forks alias their rows;
 * **serving plane** (``kvcache.paged``): fork storms, append bursts,
   tombstone cascades (freeing forked ancestors), park/resume (host
   spill + promotion), sequence migration between two caches with
-  different block size/pool/format, and decode steps landing
-  mid-migration.
+  different block size/pool/format, decode steps landing mid-migration,
+  and golden-prefix churn — register (freeze), prefix-hit admission
+  (fork + suffix append) and release of shared-prefix bases.
 
 After each event ``repro.core.invariants`` runs over every fleet, store
 and cache involved, and an *independent* host-side data oracle — page
@@ -38,6 +42,7 @@ import numpy as np
 from repro.core import fleet as fleet_lib
 from repro.core import migrate
 from repro.core import store as store_lib
+from repro.core.golden import GoldenRegistry
 from repro.core.invariants import (
     check_fleet_invariants,
     check_kv_invariants,
@@ -96,11 +101,12 @@ class ScenarioHarness:
             lease_quantum=c.lease_quantum, l2_per_table=c.n_pages,
         )
         self.store = store_lib.TieredStore.for_fleet(spec)
+        self.registry = GoldenRegistry()
         self.sched = MaintenanceScheduler(
             fleet_lib.create(spec, scalable=True),
             max_tenants_per_tick=2, store=self.store,
             device_page_budget=c.pool_capacity // 2,
-            demote_rows_per_tick=16,
+            demote_rows_per_tick=16, registry=self.registry,
         )
         dst_spec = fleet_lib.FleetSpec(
             n_tenants=c.dst_tenants, n_pages=c.n_pages,
@@ -136,6 +142,7 @@ class ScenarioHarness:
         self.kv_expected: dict[int, tuple] = {}
         self.kv_dst_expected: dict[int, tuple] = {}
         self.kv_parked: set[int] = set()
+        self.kv_golden: set[int] = set()
 
         self.trace: list[tuple] = []
         self.invariant_checks = 0
@@ -153,6 +160,9 @@ class ScenarioHarness:
             (self.ev_free_attach, 1),
             (self.ev_migrate, 2),
             (self.ev_mid_migration_write, 1),
+            (self.ev_golden_register, 1),
+            (self.ev_golden_fork, 2),
+            (self.ev_golden_release, 1),
             (self.ev_kv_new, 2),
             (self.ev_kv_append, 5),
             (self.ev_kv_fork_storm, 2),
@@ -161,6 +171,9 @@ class ScenarioHarness:
             (self.ev_kv_resume, 1),
             (self.ev_kv_migrate, 2),
             (self.ev_kv_mid_migration, 1),
+            (self.ev_kv_golden_register, 1),
+            (self.ev_kv_golden_admit, 2),
+            (self.ev_kv_golden_release, 1),
         ]
         w = np.asarray([wt for _, wt in self._events], np.float64)
         self._weights = w / w.sum()
@@ -178,13 +191,19 @@ class ScenarioHarness:
     def _pick_tenant(self) -> int:
         return int(self.rng.integers(self.config.n_tenants))
 
+    def _owner_mask(self) -> np.ndarray:
+        return self.registry.golden_owner_mask(self.config.n_tenants)
+
     def ev_write(self):
         """COW write burst; partially-applied batches (lease exhaustion)
-        reconcile the oracle against how many rows actually landed."""
+        reconcile the oracle against how many rows actually landed.
+        Registered golden owners are content-frozen and never written;
+        forks ARE written — their active volume overlays the shared base."""
         c = self.config
-        tmask = self.rng.random(c.n_tenants) < 0.7
+        tmask = (self.rng.random(c.n_tenants) < 0.7) & ~self._owner_mask()
         if not tmask.any():
-            tmask[self._pick_tenant()] = True
+            writable = np.flatnonzero(~self._owner_mask())
+            tmask[int(self.rng.choice(writable))] = True
         ids = np.stack([
             self.rng.choice(c.n_pages, c.write_batch, replace=False)
             for _ in range(c.n_tenants)
@@ -206,18 +225,20 @@ class ScenarioHarness:
         return ("write", tmask.tolist(), landed.tolist())
 
     def ev_snapshot(self):
-        mask = self.rng.random(self.config.n_tenants) < 0.5
+        mask = (self.rng.random(self.config.n_tenants) < 0.5) \
+            & ~self._owner_mask()
         self.fleet = fleet_lib.snapshot(self.fleet, jnp.asarray(mask))
         return ("snapshot", mask.tolist())
 
     def ev_stream(self):
         mask = self.rng.random(self.config.n_tenants) < 0.5
         upto = int(self.rng.integers(0, self.config.max_chain - 1))
-        self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto)
+        self.fleet = fleet_lib.stream_tenants(self.fleet, mask, upto,
+                                              registry=self.registry)
         return ("stream", mask.tolist(), upto)
 
     def ev_compact(self):
-        self.fleet = fleet_lib.compact(self.fleet)
+        self.fleet = fleet_lib.compact(self.fleet, registry=self.registry)
         return ("compact",)
 
     def ev_tick(self):
@@ -225,10 +246,14 @@ class ScenarioHarness:
         return ("tick", sorted(rep) if isinstance(rep, dict) else ())
 
     def ev_demote(self):
+        # an owner pick demotes nothing (registry skip) and a fork pick
+        # must leave the pinned base rows hot — both are the demote/fork
+        # race the registry exists to win, so no masking here
         t = self._pick_tenant()
         self.fleet, rep = fleet_lib.demote_tenants(
             self.fleet, self.store, [t],
             max_rows=int(self.rng.integers(4, 17)),
+            registry=self.registry,
         )
         return ("demote", t, rep["rows_demoted"])
 
@@ -248,9 +273,14 @@ class ScenarioHarness:
 
     def ev_free_attach(self):
         t = self._pick_tenant()
+        if self.registry.is_golden_owner(t):
+            return ("free_attach", t, "golden_owner")
         scalable = bool(self.rng.integers(2))
-        self.fleet = fleet_lib.free_tenant(self.fleet, t, store=self.store)
-        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=scalable)
+        # freeing a golden fork releases its pins inside free_tenant
+        self.fleet = fleet_lib.free_tenant(self.fleet, t, store=self.store,
+                                           registry=self.registry)
+        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=scalable,
+                                             registry=self.registry)
         self.expected[t] = {}
         return ("free_attach", t, scalable)
 
@@ -259,12 +289,19 @@ class ScenarioHarness:
         bit-verified; a previous migrant in the landing slot is evicted
         (import resets the slot)."""
         t = self._pick_tenant()
+        if self.registry.is_golden_owner(t):
+            # a frozen base can't leave while forks may pin it
+            return ("migrate", t, "golden_owner")
         d = int(self.rng.integers(self.config.dst_tenants))
+        # migrating a fork is legal: export materializes the shared pages
+        # into the blob and detach releases the pins
         self.fleet, self.dst_fleet, report = migrate.migrate_tenant(
             self.fleet, t, self.dst_fleet, d,
             src_store=self.store, dst_store=self.dst_store,
+            src_registry=self.registry,
         )
-        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=True)
+        self.fleet = fleet_lib.attach_tenant(self.fleet, t, scalable=True,
+                                             registry=self.registry)
         self.dst_expected[d] = self.expected[t]
         self.expected[t] = {}
         return ("migrate", t, d, report["rows_hot"], report["rows_cold"])
@@ -274,6 +311,8 @@ class ScenarioHarness:
         must refuse the detach and leave the source tenant intact."""
         c = self.config
         t = self._pick_tenant()
+        if self.registry.is_golden_owner(t):
+            return ("mid_migration_write", t, "golden_owner")
         blob = migrate.export_tenant(self.fleet, t, store=self.store)
         ids = np.broadcast_to(
             self.rng.choice(c.n_pages, c.write_batch,
@@ -305,6 +344,73 @@ class ScenarioHarness:
             f"detach of tenant {t} accepted a stale export"
         )
 
+    # -- fleet-plane golden events --------------------------------------------
+
+    def ev_golden_register(self):
+        """Freeze a tenant's chain as a golden base. Keeps at least two
+        tenants writable so the write/snapshot churn never starves."""
+        owners = np.flatnonzero(self._owner_mask())
+        if owners.size >= self.config.n_tenants - 2:
+            return ("golden_register", "enough_owners")
+        cands = [t for t in range(self.config.n_tenants)
+                 if self.registry.gid_of(t) is None]
+        t = cands[int(self.rng.integers(len(cands)))]
+        if int(self.fleet.cold_count[t]) > 0:
+            # golden layers must be device-resident; promote first
+            try:
+                self.fleet, _ = fleet_lib.promote_tenants(
+                    self.fleet, self.store, [t])
+            except RuntimeError:
+                return ("golden_register", t, "pool_exhausted")
+        gid, created = self.registry.register(self.fleet, t,
+                                              store=self.store)
+        return ("golden_register", t, gid, created)
+
+    def ev_golden_fork(self):
+        """Fork a registered base into a free slot: the fork's layers
+        alias the owner's pinned rows, its oracle starts as the owner's
+        frozen view, and later writes overlay it copy-on-write."""
+        gids = sorted(self.registry._chains)
+        if not gids:
+            return ("golden_fork", "no_chains")
+        gid = gids[int(self.rng.integers(len(gids)))]
+        ch = self.registry._chains[gid]
+        cands = [t for t in range(self.config.n_tenants)
+                 if self.registry.gid_of(t) is None]
+        if not cands:
+            return ("golden_fork", gid, "no_free_slot")
+        dst = cands[int(self.rng.integers(len(cands)))]
+        try:
+            self.fleet = self.registry.fork(self.fleet, gid, dst,
+                                            store=self.store)
+        except ValueError:
+            # chain too deep for a fresh active volume on top
+            return ("golden_fork", gid, dst, "no_chain_room")
+        self.expected[dst] = {
+            p: row.copy() for p, row in self.expected[ch.tenant].items()
+        }
+        return ("golden_fork", gid, dst, ch.length)
+
+    def ev_golden_release(self):
+        """Free a live fork (releasing its pins), or unregister a base
+        with no forks left — the full golden lifecycle unwinds."""
+        forks = sorted(self.registry._forks)
+        if forks:
+            t = forks[int(self.rng.integers(len(forks)))]
+            self.fleet = fleet_lib.free_tenant(
+                self.fleet, t, store=self.store, registry=self.registry)
+            self.fleet = fleet_lib.attach_tenant(
+                self.fleet, t, scalable=True, registry=self.registry)
+            self.expected[t] = {}
+            return ("golden_release", "fork", t)
+        idle = sorted(gid for gid, ch in self.registry._chains.items()
+                      if not ch.fork_count)
+        if not idle:
+            return ("golden_release", "all_pinned")
+        gid = idle[int(self.rng.integers(len(idle)))]
+        self.registry.unregister(gid)
+        return ("golden_release", "unregister", gid)
+
     # -- serving-plane events -------------------------------------------------
 
     def _kv_tokens(self, n: int):
@@ -313,10 +419,15 @@ class ScenarioHarness:
         return (self.rng.standard_normal(shape).astype(np.float32),
                 self.rng.standard_normal(shape).astype(np.float32))
 
-    def _kv_live(self, *, unparked: bool = False) -> list[int]:
+    def _kv_live(self, *, unparked: bool = False,
+                 writable: bool = False) -> list[int]:
         sids = sorted(s for s, q in self.kv._seqs.items() if not q.freed)
         if unparked:
             sids = [s for s in sids if s not in self.kv_parked]
+        if writable:
+            # registered golden prefixes are frozen: no append, park,
+            # free or migrate-away — they can only be forked or released
+            sids = [s for s in sids if s not in self.kv_golden]
         return sids
 
     def _kv_room(self, blocks: int) -> bool:
@@ -335,7 +446,7 @@ class ScenarioHarness:
         return ("kv_new", sid, n)
 
     def ev_kv_append(self):
-        sids = self._kv_live(unparked=True)
+        sids = self._kv_live(unparked=True, writable=True)
         if not sids:
             return ("kv_append", "no_live")
         sid = sids[int(self.rng.integers(len(sids)))]
@@ -374,7 +485,7 @@ class ScenarioHarness:
         return ("kv_fork_storm", sid, children)
 
     def ev_kv_free(self):
-        sids = self._kv_live()
+        sids = self._kv_live(writable=True)
         if len(sids) <= 1:
             return ("kv_free", "too_few")
         sid = sids[int(self.rng.integers(len(sids)))]
@@ -384,7 +495,7 @@ class ScenarioHarness:
         return ("kv_free", sid)
 
     def ev_kv_park(self):
-        sids = [s for s in self._kv_live() if s not in self.kv_parked]
+        sids = self._kv_live(unparked=True, writable=True)
         if not sids:
             return ("kv_park", "no_live")
         sid = sids[int(self.rng.integers(len(sids)))]
@@ -407,7 +518,7 @@ class ScenarioHarness:
         """Move a sequence (parked ones included — their spill is read in
         place) to the second cache, verify bit-identity, then free it on
         the source so tombstoned ancestors cascade."""
-        sids = self._kv_live()
+        sids = self._kv_live(writable=True)
         if not sids:
             return ("kv_migrate", "no_live")
         sid = sids[int(self.rng.integers(len(sids)))]
@@ -430,7 +541,7 @@ class ScenarioHarness:
     def ev_kv_mid_migration(self):
         """A decode-style append lands after export: the fingerprint must
         change, so the migration would abort rather than drop the source."""
-        sids = self._kv_live(unparked=True)
+        sids = self._kv_live(unparked=True, writable=True)
         if not sids:
             return ("kv_mid_migration", "no_live")
         sid = sids[int(self.rng.integers(len(sids)))]
@@ -452,12 +563,66 @@ class ScenarioHarness:
         self.guard_hits += 1
         return ("kv_mid_migration", sid, "guard_fired")
 
+    # -- serving-plane golden events ------------------------------------------
+
+    def ev_kv_golden_register(self):
+        """Freeze a live sequence as a golden shared-prefix base."""
+        if len(self.kv_golden) >= 3:
+            return ("kv_golden_register", "enough_goldens")
+        sids = [s for s in self._kv_live(unparked=True, writable=True)
+                if self.kv.seq_length(s) > 0]
+        if not sids:
+            return ("kv_golden_register", "no_live")
+        sid = sids[int(self.rng.integers(len(sids)))]
+        h = self.kv.register_golden(sid)
+        self.kv_golden.add(sid)
+        return ("kv_golden_register", sid, h[:8])
+
+    def ev_kv_golden_admit(self):
+        """Prefix-hit admission: fork a golden base and append a short
+        suffix — the engine's ``add_request`` fast path, KV-plane form.
+        A zero-length suffix is the exact-match admission."""
+        goldens = sorted(self.kv_golden)
+        if not goldens:
+            return ("kv_golden_admit", "no_goldens")
+        sid = goldens[int(self.rng.integers(len(goldens)))]
+        if not self._kv_room(4):
+            return ("kv_golden_admit", sid, "pool_low")
+        child = self.kv.fork(sid)
+        ek, ev = self.kv_expected[sid]
+        self.kv_expected[child] = (ek.copy(), ev.copy())
+        n = int(self.rng.integers(0, 4))
+        c, bs = self.config, self.config.kv_block_size
+        if n and (self.kv.seq_length(child) + n - 1) // bs < c.kv_max_blocks:
+            k, v = self._kv_tokens(n)
+            self.kv.append_prefill(child, jnp.asarray(k), jnp.asarray(v))
+            ek, ev = self.kv_expected[child]
+            self.kv_expected[child] = (np.concatenate([ek, k], axis=1),
+                                       np.concatenate([ev, v], axis=1))
+        else:
+            n = 0
+        return ("kv_golden_admit", sid, child, n)
+
+    def ev_kv_golden_release(self):
+        """Unfreeze and free a golden base; children survive through
+        their parent links (vanilla tombstone cascade)."""
+        goldens = sorted(self.kv_golden)
+        if not goldens:
+            return ("kv_golden_release", "no_goldens")
+        sid = goldens[int(self.rng.integers(len(goldens)))]
+        self.kv.release_golden(sid)
+        self.kv.free_seq(sid)
+        self.kv_golden.discard(sid)
+        del self.kv_expected[sid]
+        return ("kv_golden_release", sid)
+
     # -- checking -------------------------------------------------------------
 
     def check(self, *, data: bool = False):
         """Run the shared invariant suite over every plane; with
         ``data=True`` also compare the independent oracles bit-for-bit."""
-        check_fleet_invariants(self.fleet, store=self.store)
+        check_fleet_invariants(self.fleet, store=self.store,
+                               registry=self.registry)
         check_fleet_invariants(self.dst_fleet, store=self.dst_store)
         check_kv_invariants(self.kv)
         check_kv_invariants(self.kv_dst)
@@ -526,4 +691,7 @@ class ScenarioHarness:
             live_seqs=len(self._kv_live()),
             fleet_rows=int(np.asarray(self.fleet.alloc_count).sum()),
             host_rows=self.store.host_rows_in_use(),
+            golden_chains=self.registry.stats()["golden_chains"],
+            golden_forks=self.registry.stats()["golden_forks"],
+            kv_goldens=len(self.kv_golden),
         )

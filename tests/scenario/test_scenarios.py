@@ -59,6 +59,22 @@ def test_storms_cover_both_planes(storms):
         assert "migrate" in kinds or "kv_migrate" in kinds
 
 
+def test_storms_exercise_golden_plane(storms):
+    """The storms must register, fork AND release golden bases on both
+    planes — the registry guards only matter under concurrent churn."""
+    kinds = {e[1] for h in storms.values() for e in h.trace}
+    assert {"golden_register", "golden_fork", "golden_release"} <= kinds
+    assert {"kv_golden_register", "kv_golden_admit",
+            "kv_golden_release"} <= kinds
+    # at least one *successful* fork per plane (not just no-op probes):
+    # a fleet fork record ends with the chain length, a KV admission
+    # record with the suffix length — both ints only on success
+    assert any(e[1] == "golden_fork" and isinstance(e[-1], int)
+               for h in storms.values() for e in h.trace)
+    assert any(e[1] == "kv_golden_admit" and isinstance(e[-1], int)
+               for h in storms.values() for e in h.trace)
+
+
 def test_replay_determinism():
     """Same seed, same config ⇒ byte-identical event trace."""
     cfg = ScenarioConfig(seed=7, events=120)

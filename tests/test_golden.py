@@ -1,0 +1,499 @@
+"""Golden-prefix registry: content addressing, fork pins, freeze guards.
+
+Contracts under test:
+
+* ``PrefixTrie``: radix lookup returns the *deepest* registered prefix,
+  path-compressed edges split/merge correctly under insert/remove;
+* ``GoldenRegistry``: registration is content-addressed (identical
+  chains hash identically regardless of pool layout), forks pin exactly
+  the layers they alias (full and partial depth), the lifecycle guards
+  (free/unregister/re-register) refuse every unsafe transition;
+* maintenance bit-preservation: compact/stream/demote with the registry
+  never move or spill a pinned row, so a frozen base's fingerprint and
+  every fork's view survive the whole maintenance plane — including the
+  demote/fork race the per-layer refcounts exist to win;
+* ``check_fleet_invariants``/``check_kv_invariants`` catch golden-state
+  corruption (mutated frozen owner, drifted refcounts, flag drift);
+* the serving plane: ``PagedKVCache.register_golden`` freezes a
+  sequence (append/decode-prepare/free all refuse), forks of it decode
+  on, ``prepare_step_single`` is bit-identical to the batched prepare,
+  and ``Engine.add_request`` admission off a golden base is bitwise
+  equal to a duplicate-storage oracle running the same suffix dispatch.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import fleet, store
+from repro.core.golden import GoldenRegistry, PrefixTrie
+from repro.core.invariants import check_fleet_invariants, check_kv_invariants
+from repro.core.metrics import golden_residency
+from repro.core.migrate import tenant_fingerprint
+from repro.core.scheduler import MaintenanceScheduler
+from repro.kvcache.paged import PagedKVCache, PagedKVConfig
+from repro.models.api import get_model
+from repro.serve.engine import Engine
+
+N_PAGES, PAGE = 32, 4
+
+
+# -- PrefixTrie ---------------------------------------------------------------
+
+
+def test_trie_longest_prefix_picks_deepest():
+    t = PrefixTrie()
+    t.insert([1, 2], "short")
+    t.insert([1, 2, 3, 4], "long")
+    assert t.longest_prefix([1, 2, 3, 4, 9]) == (4, "long")
+    assert t.longest_prefix([1, 2, 3]) == (2, "short")
+    assert t.longest_prefix([1, 9]) == (0, None)
+    assert len(t) == 2
+
+
+def test_trie_edge_split_on_divergence():
+    t = PrefixTrie()
+    t.insert([5, 6, 7, 8], "a")
+    t.insert([5, 6, 9], "b")       # splits the compressed [5,6,7,8] edge
+    assert t.longest_prefix([5, 6, 7, 8]) == (4, "a")
+    assert t.longest_prefix([5, 6, 9, 1]) == (3, "b")
+    assert t.longest_prefix([5, 6]) == (0, None)
+
+
+def test_trie_remove_and_guards():
+    t = PrefixTrie()
+    t.insert([1, 2, 3], "x")
+    with pytest.raises(ValueError):
+        t.insert([], "empty")
+    with pytest.raises(ValueError):
+        t.insert([1, 2, 3], "other")   # same key, different value
+    t.remove([1, 2, 3])
+    assert t.longest_prefix([1, 2, 3]) == (0, None)
+    assert len(t) == 0
+    with pytest.raises(KeyError):
+        t.remove([1, 2, 3])
+
+
+# -- fleet-plane registry -----------------------------------------------------
+
+
+def make_fleet(n_tenants=4, *, scalable=True, pool_capacity=512,
+               max_chain=6):
+    spec = fleet.FleetSpec(
+        n_tenants=n_tenants, n_pages=N_PAGES, page_size=PAGE,
+        max_chain=max_chain, pool_capacity=pool_capacity,
+        lease_quantum=8, l2_per_table=N_PAGES,
+    )
+    return fleet.create(spec, scalable=jnp.asarray(scalable, bool))
+
+
+def write_layers(fl, t, layers, *, writes=6, seed=0):
+    """Write+snapshot ``layers`` times on tenant ``t`` only; returns the
+    fleet and the tenant's expected page->row view."""
+    rng = np.random.default_rng(seed)
+    n_t = fl.spec.n_tenants
+    mask = np.zeros(n_t, bool)
+    mask[t] = True
+    view = {}
+    for layer in range(layers):
+        ids = np.broadcast_to(
+            rng.choice(N_PAGES, writes, replace=False).astype(np.int32),
+            (n_t, writes))
+        # tenant-independent bytes: two tenants grown with the same seed
+        # hold bit-identical chains (the content-addressing fixture)
+        data = np.broadcast_to(
+            rng.standard_normal((writes, PAGE)).astype(np.float32),
+            (n_t, writes, PAGE))
+        fl = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data),
+                         jnp.asarray(mask))
+        for i in range(writes):
+            view[int(ids[t, i])] = data[t, i].copy()
+        if layer < layers - 1:
+            fl = fleet.snapshot(fl, jnp.asarray(mask))
+    return fl, view
+
+
+def tenant_view(fl, t):
+    grid = np.broadcast_to(np.arange(N_PAGES, dtype=np.int32),
+                           (fl.spec.n_tenants, N_PAGES))
+    return np.asarray(fleet.read(fl, grid)[0])[t]
+
+
+def view_from(pages):
+    out = np.zeros((N_PAGES, PAGE), np.float32)
+    for p, row in pages.items():
+        out[p] = row
+    return out
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_register_is_content_addressed(scalable):
+    """Two tenants written identically hash to the same gid even though
+    their pool rows differ; a third, different tenant does not."""
+    fl = make_fleet(scalable=scalable)
+    fl, _ = write_layers(fl, 0, 3, seed=1)
+    fl, _ = write_layers(fl, 1, 3, seed=1)    # same content, other rows
+    fl, _ = write_layers(fl, 2, 3, seed=2)    # different content
+    reg = GoldenRegistry()
+    gid0, created0 = reg.register(fl, 0)
+    gid1, created1 = reg.register(fl, 1)
+    gid2, created2 = reg.register(fl, 2)
+    assert created0 and not created1 and created2
+    assert gid0 == gid1 != gid2
+    # the duplicate tenant was NOT recorded as an owner: it stays an
+    # ordinary tenant the caller can free or fork-from-the-original
+    assert reg.is_golden_owner(0) and not reg.is_golden_owner(1)
+    check_fleet_invariants(fl, registry=reg)
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_fork_aliases_base_and_overlays_cow(scalable):
+    fl = make_fleet(scalable=scalable)
+    fl, base_view = write_layers(fl, 0, 3, seed=3)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0)
+    fl = reg.fork(fl, gid, 2)
+    check_fleet_invariants(fl, registry=reg)
+    assert np.array_equal(tenant_view(fl, 2), view_from(base_view))
+    # COW overlay: the fork writes, the frozen base must not move
+    mask = np.zeros(4, bool)
+    mask[2] = True
+    ids = np.zeros((4, 2), np.int32)
+    ids[2] = [0, 1]
+    data = np.full((4, 2, PAGE), 9.0, np.float32)
+    fl = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data),
+                     jnp.asarray(mask))
+    check_fleet_invariants(fl, registry=reg)
+    got = tenant_view(fl, 2)
+    assert (got[0] == 9.0).all() and (got[1] == 9.0).all()
+    assert np.array_equal(tenant_view(fl, 0), view_from(base_view))
+    st = reg.stats()
+    assert st["golden_forks"] == 1
+    assert st["dedup_rows_saved"] > 0
+    res = golden_residency(reg)
+    assert res.dedup_rows_saved == st["dedup_rows_saved"]
+    assert res.golden_chains == 1
+
+
+def test_partial_depth_fork_pins_only_lower_layers():
+    fl = make_fleet(scalable=True)
+    fl, _ = write_layers(fl, 0, 4, seed=4)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0)
+    ch = reg._chains[gid]
+    fl = reg.fork(fl, gid, 1, depth=2)
+    assert np.array_equal(ch.layer_refs,
+                          np.array([1, 1, 0, 0], np.int64))
+    shared = reg.shared_rows_for(1)
+    assert np.array_equal(shared, ch.cum_rows[1])
+    assert shared.size < ch.rows.size   # deeper layers are NOT pinned
+    check_fleet_invariants(fl, registry=reg)
+    reg.release(1)
+    assert not ch.layer_refs.any()
+
+
+def test_lifecycle_guards():
+    fl = make_fleet()
+    fl, _ = write_layers(fl, 0, 2, seed=5)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0)
+    fl = reg.fork(fl, gid, 1)
+    # a frozen owner cannot be freed while registered
+    with pytest.raises(ValueError, match="golden"):
+        fleet.free_tenant(fl, 0, registry=reg)
+    # a fork aliases foreign rows: it can never itself be registered
+    with pytest.raises(ValueError, match="fork"):
+        reg.register(fl, 1)
+    # an owner/fork slot is not a legal fork destination
+    with pytest.raises(ValueError, match="slot"):
+        reg.fork(fl, gid, 1)
+    # a pinned chain cannot be unregistered
+    with pytest.raises(ValueError, match="forks"):
+        reg.unregister(gid)
+    with pytest.raises(ValueError, match="depth"):
+        reg.fork(fl, gid, 2, depth=99)
+    # freeing the fork releases its pins; then the chain can go
+    fl = fleet.free_tenant(fl, 1, registry=reg)
+    reg.unregister(gid)
+    fl = fleet.free_tenant(fl, 0, registry=reg)
+    check_fleet_invariants(fl, registry=reg)
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_maintenance_preserves_frozen_base(scalable):
+    """compact + stream + demote with the registry must leave the owner
+    bit-frozen (same fingerprint) and every fork's view intact."""
+    fl = make_fleet(scalable=scalable)
+    fl, base_view = write_layers(fl, 0, 3, seed=6)
+    fl, _ = write_layers(fl, 3, 3, seed=7)    # churn neighbour
+    st = store.TieredStore.for_fleet(fl.spec)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0, store=st)
+    fp = reg._chains[gid].fingerprint
+    fl = reg.fork(fl, gid, 1, store=st)
+    fl = fleet.compact(fl, registry=reg)
+    fl = fleet.stream_tenants(fl, np.ones(4, bool), 1, registry=reg)
+    fl, rep = fleet.demote_tenants(fl, st, [0, 1, 3], registry=reg)
+    check_fleet_invariants(fl, store=st, registry=reg)
+    assert tenant_fingerprint(fl, 0) == fp
+    assert np.array_equal(tenant_view(fl, 1), view_from(base_view))
+    # the neighbour DID demote — the exclusion is per-row, not global
+    assert rep["rows_demoted"] > 0
+
+
+def test_demote_fork_race_never_spills_pinned_rows():
+    """The regression the refcounts exist for: a fork's lower layers are
+    immutable-below-active — exactly demotion's eligibility shape — but
+    spilling them would yank the base from under every sibling fork."""
+    fl = make_fleet(scalable=True)
+    fl, _ = write_layers(fl, 0, 3, seed=8)
+    st = store.TieredStore.for_fleet(fl.spec)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0, store=st)
+    fl = reg.fork(fl, gid, 1, store=st)
+    fl = fleet.snapshot(fl, jnp.asarray([False, True, False, False]))
+    # owner pick: skipped wholesale; fork pick: pinned rows excluded
+    fl, rep0 = fleet.demote_tenants(fl, st, [0], registry=reg)
+    assert rep0["rows_demoted"] == 0
+    fl, rep1 = fleet.demote_tenants(fl, st, [1], registry=reg)
+    # the fork's below-active layers are ALL pinned base rows — demotion
+    # found nothing legal to spill
+    assert rep1["rows_demoted"] == 0
+    assert int(fl.cold_count[0]) == 0 and int(fl.cold_count[1]) == 0
+    check_fleet_invariants(fl, store=st, registry=reg)
+    # and the scheduler's budget-pressure demotion honours the same pins
+    sched = MaintenanceScheduler(fl, store=st, device_page_budget=1,
+                                 demote_rows_per_tick=64, registry=reg)
+    for _ in range(4):
+        sched.tick()
+    check_fleet_invariants(sched.fleet, store=st, registry=reg)
+    assert tenant_fingerprint(sched.fleet, 0) == \
+        reg._chains[gid].fingerprint
+
+
+def test_invariants_catch_mutated_frozen_owner():
+    fl = make_fleet()
+    fl, _ = write_layers(fl, 0, 2, seed=9)
+    reg = GoldenRegistry()
+    reg.register(fl, 0)
+    mask = np.zeros(4, bool)
+    mask[0] = True
+    ids = np.zeros((4, 1), np.int32)
+    data = np.ones((4, 1, PAGE), np.float32)
+    broken = fleet.write(fl, jnp.asarray(ids), jnp.asarray(data),
+                         jnp.asarray(mask))     # write on a frozen base
+    with pytest.raises(AssertionError, match="mutated"):
+        check_fleet_invariants(broken, registry=reg)
+
+
+def test_invariants_catch_refcount_drift():
+    fl = make_fleet()
+    fl, _ = write_layers(fl, 0, 2, seed=10)
+    reg = GoldenRegistry()
+    gid, _ = reg.register(fl, 0)
+    fl = reg.fork(fl, gid, 1)
+    reg._chains[gid].layer_refs[0] += 1          # the deliberate drift
+    with pytest.raises(AssertionError, match="refcounts"):
+        check_fleet_invariants(fl, registry=reg)
+
+
+# -- serving plane: PagedKVCache ---------------------------------------------
+
+
+def kv_cache(scalable, *, n_blocks=64, max_blocks=8):
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=8, block_size=4,
+                        n_blocks=n_blocks, max_blocks_per_seq=max_blocks,
+                        dtype=jnp.float32)
+    return PagedKVCache(cfg, scalable=scalable, resolver="gather")
+
+
+def rand_kv(n, seed):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.standard_normal((1, n, 1, 8)), jnp.float32),
+            jnp.asarray(r.standard_normal((1, n, 1, 8)), jnp.float32))
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_kv_register_freezes_sequence(scalable):
+    kv = kv_cache(scalable)
+    sid = kv.new_seq()
+    k, v = rand_kv(8, 11)
+    kv.append_prefill(sid, k, v)
+    h = kv.register_golden(sid)
+    assert kv.register_golden(sid) == h          # idempotent
+    assert kv.is_golden(sid)
+    with pytest.raises(RuntimeError, match="frozen"):
+        kv.append_prefill(sid, k, v)
+    with pytest.raises(RuntimeError, match="frozen"):
+        kv.prepare_step([sid])
+    with pytest.raises(ValueError, match="release_golden"):
+        kv.free_seq(sid)
+    assert kv.demote_seq(sid) == 0               # golden layers stay hot
+    check_kv_invariants(kv)
+    # content addressing: an identical sequence hashes identically, a
+    # different one doesn't
+    twin, other = kv.new_seq(), kv.new_seq()
+    kv.append_prefill(twin, k, v)
+    kv.append_prefill(other, *rand_kv(8, 12))
+    assert kv.register_golden(twin) == h
+    assert kv.register_golden(other) != h
+    kv.release_golden(sid)
+    kv.free_seq(sid)                             # now an ordinary free
+    check_kv_invariants(kv)
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_kv_fork_of_golden_decodes_on(scalable):
+    kv = kv_cache(scalable)
+    sid = kv.new_seq()
+    kv.append_prefill(sid, *rand_kv(8, 13))
+    kv.register_golden(sid)
+    child = kv.fork(sid)
+    k, v = rand_kv(2, 14)
+    kv.append_prefill(child, k, v)               # the suffix
+    gk, _ = kv.gather(child)
+    pk, _ = kv.gather(sid)
+    assert np.array_equal(np.asarray(gk[:, :8]), np.asarray(pk))
+    st = kv.golden_stats()
+    assert st["golden_seqs"] == 1
+    assert st["golden_blocks_shared"] == 2       # 8 tokens / bs 4
+    assert st["dedup_blocks_saved"] == 2
+    check_kv_invariants(kv)
+
+
+def test_kv_invariants_catch_golden_flag_drift():
+    kv = kv_cache(True)
+    sid = kv.new_seq()
+    kv.append_prefill(sid, *rand_kv(4, 15))
+    kv.register_golden(sid)
+    del kv._golden[sid]                          # the deliberate drift
+    with pytest.raises(AssertionError):
+        check_kv_invariants(kv)
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_prepare_step_single_matches_batched(scalable):
+    kv = kv_cache(scalable)
+    a, b = kv.new_seq(), kv.new_seq()
+    kv.append_prefill(a, *rand_kv(7, 16))
+    kv.append_prefill(b, *rand_kv(5, 17))
+    c = kv.fork(a)
+    want_t, want_l = kv.prepare_step([c])
+    # a fresh fork so the single-sequence path does its own COW prepare
+    d = kv.fork(a)
+    got_t, got_l = kv.prepare_step_single(d)
+    assert got_t.shape == want_t.shape and got_l.shape == want_l.shape
+    # same parent, same length: the write block differs (each fork COWs
+    # its own), everything else must agree
+    wt, gt = np.asarray(want_t)[0], np.asarray(got_t)[0]
+    blk = int(np.asarray(want_l)[0]) // kv.cfg.block_size
+    assert np.array_equal(np.delete(wt, blk), np.delete(gt, blk))
+    assert np.array_equal(np.asarray(want_l), np.asarray(got_l))
+    # and on the very same sequence the two paths are bit-identical
+    t1, l1 = kv.prepare_step([c])
+    t2, l2 = kv.prepare_step_single(c)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+    assert np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# -- serving plane: Engine admission -----------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = dataclasses.replace(smoke_config("qwen2-7b"), n_layers=1)
+    return cfg, get_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def make_engine(tiny_model, scalable=True):
+    cfg, params = tiny_model
+    return Engine(cfg, params, scalable=scalable, n_blocks=256,
+                  block_size=4, max_blocks_per_seq=32,
+                  resolver="gather", decode_path="tables")
+
+
+@pytest.mark.parametrize("scalable", [False, True])
+def test_engine_admission_bitwise_vs_duplicate_storage(tiny_model,
+                                                       scalable):
+    """A prefix-hit admission must be bitwise what a dedup-free engine
+    would store: duplicate the golden's bytes, run the SAME chunked
+    suffix dispatch, compare everything."""
+    eng = make_engine(tiny_model, scalable)
+    rng = np.random.default_rng(18)
+    prefix = rng.integers(0, eng.cfg.vocab_size, 24).tolist()
+    suffix = rng.integers(0, eng.cfg.vocab_size, 3).tolist()
+    gsid = eng.register_golden(np.asarray(prefix, np.int32))
+
+    sid = eng.add_request(np.asarray(prefix + suffix, np.int32))
+    assert eng.golden_hits == 1
+    tok = eng.active[sid][0]
+
+    gk, gv = eng.kv.gather(gsid)
+    osid = eng.kv.new_seq()
+    eng.kv.append_prefill(osid, gk, gv)          # duplicate the storage
+    otok = eng._suffix_prefill(osid, suffix)     # the same dispatch
+    assert tok == otok
+    fk, fv = eng.kv.gather(sid)
+    ok_, ov_ = eng.kv.gather(osid)
+    assert np.array_equal(np.asarray(fk), np.asarray(ok_))
+    assert np.array_equal(np.asarray(fv), np.asarray(ov_))
+    check_kv_invariants(eng.kv)
+
+    # the fork decodes on (COW write slots, frozen base untouched)
+    eng.step()
+    assert len(eng.active[sid]) == 2
+
+    stats = eng.memory_stats()
+    assert stats["golden_hits"] == 1
+    assert stats["golden_seqs"] == 1
+    assert stats["dedup_blocks_saved"] >= 6      # 24 tokens / bs 4
+
+
+def test_engine_exact_match_skips_model(tiny_model):
+    eng = make_engine(tiny_model)
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(0, eng.cfg.vocab_size, 16).tolist()
+    gsid = eng.register_golden(np.asarray(prompt, np.int32))
+    before = eng.kv.blocks_in_use()
+    sid = eng.add_request(np.asarray(prompt, np.int32))
+    # an exact match forks and replays the recorded first token — the
+    # only new block is the fork's COW copy of the partial tail block
+    assert eng.active[sid][0] == eng._golden_info[gsid][1]
+    assert eng.kv.blocks_in_use() <= before + 1
+    assert eng.golden_hits == 1
+
+
+def test_engine_miss_takes_full_prefill(tiny_model):
+    eng = make_engine(tiny_model)
+    rng = np.random.default_rng(20)
+    eng.register_golden(
+        np.asarray(rng.integers(0, eng.cfg.vocab_size, 16), np.int32))
+    other = rng.integers(0, eng.cfg.vocab_size, 12)
+    sid = eng.add_request(np.asarray(other, np.int32))
+    assert eng.golden_hits == 0
+    assert eng.kv.seq_length(sid) == 12
+    eng.step()
+    assert len(eng.active[sid]) == 2
+
+
+def test_engine_release_golden_unfreezes(tiny_model):
+    eng = make_engine(tiny_model)
+    rng = np.random.default_rng(21)
+    prompt = np.asarray(rng.integers(0, eng.cfg.vocab_size, 16), np.int32)
+    gsid = eng.register_golden(prompt)
+    sid = eng.add_request(np.asarray(
+        prompt.tolist() + rng.integers(0, eng.cfg.vocab_size, 2).tolist(),
+        np.int32))
+    eng.release_golden(gsid)
+    # the trie no longer matches: a new identical prompt full-prefills
+    sid2 = eng.add_request(prompt)
+    assert eng.golden_hits == 1                  # only the pre-release hit
+    # the fork keeps decoding after its base was released (its blocks
+    # are refcounted, not lifetime-coupled to the registration)
+    eng.step()
+    assert len(eng.active[sid]) == 2 and len(eng.active[sid2]) == 2
+    check_kv_invariants(eng.kv)

@@ -43,9 +43,19 @@ TIERING_TIERED_KEYS = TIERING_KEYS | {"promote_wave_ms", "ratio_vs_baseline"}
 MIGRATION_KEYS = {"depth", "n_pages", "page_size", "rows_hot", "rows_cold",
                   "blob_kb", "export_ms", "import_ms", "verify_ms",
                   "detach_ms", "roundtrip_ms", "verified"}
+PREFIX_SECTIONS = {
+    "capacity": {"section", "format", "n_seqs", "n_prefixes",
+                 "prefix_tokens", "suffix_tokens", "dedup_blocks",
+                 "baseline_blocks", "blocks_ratio", "golden_blocks_shared",
+                 "dedup_blocks_saved", "verified"},
+    "ttft": {"section", "format", "n_concurrent", "n_prefixes",
+             "prefix_tokens", "suffix_tokens", "dedup_admit_ms",
+             "baseline_admit_ms", "speedup", "token_agreement",
+             "golden_hits", "dedup_blocks_saved", "verified"},
+}
 
 # benchmarks whose records carry a bit-verified flag that must hold
-VERIFIED_BENCHMARKS = {"serve", "tiering", "migration"}
+VERIFIED_BENCHMARKS = {"serve", "tiering", "migration", "prefix"}
 
 
 def _bad_floats(obj, path: str = "$") -> list[str]:
@@ -75,6 +85,11 @@ def _record_keys(benchmark: str, rec: dict) -> set[str] | None:
         if section not in SERVE_SECTIONS:
             return {"section"}  # forces a "missing/unknown section" error
         return SERVE_SECTIONS[section]
+    if benchmark == "prefix":
+        section = rec.get("section")
+        if section not in PREFIX_SECTIONS:
+            return {"section"}  # forces a "missing/unknown section" error
+        return PREFIX_SECTIONS[section]
     if benchmark == "tiering":
         return (TIERING_TIERED_KEYS if rec.get("mode") == "tiered"
                 else TIERING_KEYS)
